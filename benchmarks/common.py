@@ -1,0 +1,34 @@
+"""Shared helpers for the benchmark suite: CSV tables + claim checks."""
+
+from __future__ import annotations
+
+import sys
+import time
+from contextlib import contextmanager
+
+
+def table(title: str, header: list[str], rows: list[list]):
+    print(f"\n## {title}")
+    print(",".join(str(h) for h in header))
+    for r in rows:
+        print(",".join(f"{x:.4g}" if isinstance(x, float) else str(x) for x in r))
+    sys.stdout.flush()
+
+
+def claim(name: str, ok: bool, detail: str = ""):
+    status = "PASS" if ok else "FAIL"
+    print(f"CLAIM [{status}] {name}  {detail}")
+    return ok
+
+
+@contextmanager
+def timed(name: str):
+    t0 = time.time()
+    yield
+    print(f"({name}: {time.time() - t0:.1f}s)")
+
+
+THREADS_2S = [1, 2, 4, 8, 16, 24, 36, 48, 70]
+THREADS_4S = [1, 2, 4, 8, 16, 36, 72, 108, 142]
+LOCK_SET = ["mcs", "cna", "cna_opt", "c-bo-mcs", "hmcs", "tas", "ticket", "hbo"]
+MAIN_LOCKS = ["mcs", "cna", "cna_opt", "c-bo-mcs", "hmcs"]

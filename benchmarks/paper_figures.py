@@ -1,0 +1,177 @@
+"""Reproduction of the paper's evaluation (Section 7) on the NUMA simulator.
+
+One function per figure.  Each prints a CSV table and checks the paper's
+qualitative claims (PASS/FAIL lines are collected into EXPERIMENTS.md §Repro):
+
+  fig6  key-value map throughput, 2-socket, no external work
+  fig7  LLC load-miss-rate proxy (remote transfers/op)
+  fig8  long-term fairness factor
+  fig9  key-value map with non-critical work (incl. CNA(opt) shuffle reduction)
+  fig10 4-socket machine
+  fig11 leveldb-like readrandom (short CS, some external work)
+  fig12 kyoto-like wicked mode (long CS, zero scaling)
+  fig13 locktorture (random CS lengths, occasional long delay)
+  fig15 will-it-scale-like (scales until the spin lock contends)
+"""
+
+from __future__ import annotations
+
+from repro.core.locks_sim import ALL_LOCKS
+from repro.core.numasim import FOUR_SOCKET, TWO_SOCKET, CostModel, run_sweep
+from dataclasses import replace
+
+from .common import MAIN_LOCKS, THREADS_2S, THREADS_4S, claim, table
+
+DUR = 8_000_000
+# The paper keeps the lock local for ~thousands of handovers per flush on a
+# 10s run; our simulated runs are ~10k-40k ops, so the threshold is scaled to
+# keep (flushes / run) in the same regime.
+KW = {"cna": {"threshold": 0xFF}, "cna_opt": {"threshold": 0xFF}}
+
+
+def _sweep(names, threads, cm, *, noncs=None, seed=42, duration=DUR, cs=None):
+    out = {}
+    cm = cm if cs is None else replace(cm, cs_base=cs)
+    for name in names:
+        out[name] = run_sweep(
+            ALL_LOCKS[name], threads, 4 if cm is FOUR_SOCKET else 2, cm,
+            seed=seed, duration_cycles=duration, noncs_cycles=noncs,
+            lock_kwargs=KW.get(name),
+        )
+    return out
+
+
+def _tab(title, res, field):
+    names = list(res)
+    threads = [r.n_threads for r in res[names[0]]]
+    rows = [[t] + [getattr(res[n][i], field) for n in names] for i, t in enumerate(threads)]
+    table(title, ["threads"] + names, rows)
+    return rows
+
+
+def fig6():
+    res = _sweep(MAIN_LOCKS, THREADS_2S, TWO_SOCKET, noncs=0)
+    rows = _tab("fig6: key-value map throughput (ops/us), 2-socket, no external work",
+                res, "throughput_ops_per_us")
+    tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in res}
+    claim("fig6: MCS collapses 1->2 threads", tp["mcs"][1] < 0.55 * tp["mcs"][0],
+          f"{tp['mcs'][0]:.2f}->{tp['mcs'][1]:.2f}")
+    claim("fig6: CNA == MCS single-thread (<3% gap)",
+          abs(tp["cna"][0] - tp["mcs"][0]) / tp["mcs"][0] < 0.03,
+          f"cna={tp['cna'][0]:.2f} mcs={tp['mcs'][0]:.2f}")
+    claim("fig6: CNA >= 1.35x MCS at 70 threads (paper: ~1.39x)",
+          tp["cna"][-1] >= 1.35 * tp["mcs"][-1],
+          f"speedup={tp['cna'][-1] / tp['mcs'][-1]:.2f}")
+    claim("fig6: CNA within 15% of HMCS under contention",
+          tp["cna"][-1] >= 0.85 * tp["hmcs"][-1],
+          f"cna={tp['cna'][-1]:.2f} hmcs={tp['hmcs'][-1]:.2f}")
+    return res
+
+
+def fig7(res=None):
+    res = res or _sweep(MAIN_LOCKS, THREADS_2S, TWO_SOCKET, noncs=0)
+    _tab("fig7: remote-transfer rate per op (LLC-miss proxy)", res, "remote_rate")
+    rr = {n: [r.remote_rate for r in res[n]] for n in res}
+    claim("fig7: MCS remote rate >> CNA under contention (>=2x)",
+          rr["mcs"][-1] >= 2.0 * rr["cna"][-1],
+          f"mcs={rr['mcs'][-1]:.2f} cna={rr['cna'][-1]:.2f}")
+    claim("fig7: miss rate jumps 1->2 threads (all locks)",
+          rr["mcs"][1] > 5 * max(rr["mcs"][0], 1e-6), f"{rr['mcs'][0]:.3f}->{rr['mcs'][1]:.3f}")
+
+
+def fig8(res=None):
+    res = res or _sweep(MAIN_LOCKS, THREADS_2S, TWO_SOCKET, noncs=0)
+    _tab("fig8: fairness factor (0.5 = strictly fair)", res, "fairness_factor")
+    ff = {n: [r.fairness_factor for r in res[n]] for n in res}
+    claim("fig8: MCS strictly fair (~0.5)", all(f < 0.53 for f in ff["mcs"][1:]),
+          f"max={max(ff['mcs'][1:]):.3f}")
+    claim("fig8: CNA preserves long-term fairness (< 0.62, paper: 'well below 60%')",
+          all(f < 0.62 for f in ff["cna"][1:]), f"max={max(ff['cna'][1:]):.3f}")
+    claim("fig8: C-BO-MCS unfair (-> 1)", max(ff["c-bo-mcs"][2:]) > 0.75,
+          f"max={max(ff['c-bo-mcs'][2:]):.3f}")
+
+
+def fig9():
+    res = _sweep(MAIN_LOCKS, THREADS_2S, TWO_SOCKET, noncs=2500)
+    rows = _tab("fig9: key-value map + external work (ops/us)", res, "throughput_ops_per_us")
+    tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in res}
+    claim("fig9: benchmark scales 1->2 threads with MCS", tp["mcs"][1] > 1.2 * tp["mcs"][0],
+          f"{tp['mcs'][0]:.2f}->{tp['mcs'][1]:.2f}")
+    claim("fig9: CNA ~ +40% over MCS at high contention",
+          tp["cna"][-1] >= 1.3 * tp["mcs"][-1], f"speedup={tp['cna'][-1]/tp['mcs'][-1]:.2f}")
+    claim("fig9: shuffle reduction repairs the low-contention dip (cna_opt >= mcs @4)",
+          tp["cna_opt"][2] >= 0.97 * tp["mcs"][2],
+          f"cna_opt={tp['cna_opt'][2]:.2f} mcs={tp['mcs'][2]:.2f} cna={tp['cna'][2]:.2f}")
+
+
+def fig10():
+    res = _sweep(MAIN_LOCKS, THREADS_4S, FOUR_SOCKET, noncs=0)
+    _tab("fig10: key-value map throughput, 4-socket (ops/us)", res, "throughput_ops_per_us")
+    tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in res}
+    claim("fig10: CNA ~ 2x MCS at 142 threads (paper: +97%)",
+          tp["cna"][-1] >= 1.7 * tp["mcs"][-1], f"speedup={tp['cna'][-1]/tp['mcs'][-1]:.2f}")
+    drop2 = tp["mcs"][1] / tp["mcs"][0]
+    claim("fig10: 1->2 thread drop deeper than 2-socket (higher remote cost)",
+          drop2 < 0.45, f"retained={drop2:.2f}")
+
+
+def fig11():
+    # leveldb readrandom: short critical sections (snapshot + refcount), some
+    # external work (the actual key lookup outside the central lock)
+    res = _sweep(MAIN_LOCKS, THREADS_2S, TWO_SOCKET, noncs=1200, cs=250)
+    _tab("fig11: leveldb-like readrandom (ops/us)", res, "throughput_ops_per_us")
+    tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in res}
+    claim("fig11: CNA ~ +39% over MCS at max threads",
+          tp["cna"][-1] >= 1.25 * tp["mcs"][-1], f"speedup={tp['cna'][-1]/tp['mcs'][-1]:.2f}")
+
+
+def fig12():
+    # kyoto wicked: long critical sections, no external work -> zero scaling
+    res = _sweep(MAIN_LOCKS, THREADS_2S, TWO_SOCKET, noncs=0, cs=1500)
+    _tab("fig12: kyoto-cabinet-like wicked mode (ops/us)", res, "throughput_ops_per_us")
+    tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in res}
+    claim("fig12: best performance at 1 thread (no scaling)",
+          tp["mcs"][0] >= max(tp["mcs"]), "")
+    claim("fig12: CNA matches MCS at 1 thread",
+          abs(tp["cna"][0] - tp["mcs"][0]) / tp["mcs"][0] < 0.03, "")
+    claim("fig12: CNA ~ +28-43% over MCS at 36-70 threads",
+          tp["cna"][-1] >= 1.2 * tp["mcs"][-1], f"speedup={tp['cna'][-1]/tp['mcs'][-1]:.2f}")
+
+
+def fig13():
+    # locktorture: tiny critical sections with occasional long delays
+    res = _sweep(["mcs", "cna"], THREADS_2S, TWO_SOCKET, noncs=60, cs=120)
+    _tab("fig13: locktorture-like (stock=mcs vs CNA, ops/us)", res, "throughput_ops_per_us")
+    tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in res}
+    claim("fig13: CNA > stock beyond 4 threads (paper: +14%@70)",
+          tp["cna"][-1] > 1.05 * tp["mcs"][-1], f"speedup={tp['cna'][-1]/tp['mcs'][-1]:.2f}")
+    # lockstat mode: more shared data written in the CS => bigger CNA win
+    res2 = _sweep(["mcs", "cna"], THREADS_2S, replace(TWO_SOCKET, n_write_lines=6), noncs=60, cs=120)
+    _tab("fig13b: locktorture + lockstat (more shared writes)", res2, "throughput_ops_per_us")
+    tp2 = {n: [r.throughput_ops_per_us for r in res2[n]] for n in res2}
+    gain1 = tp["cna"][-1] / tp["mcs"][-1]
+    gain2 = tp2["cna"][-1] / tp2["mcs"][-1]
+    claim("fig13: lockstat (more shared writes) widens the CNA gap",
+          gain2 > gain1, f"{gain1:.2f} -> {gain2:.2f}")
+
+
+def fig15():
+    # will-it-scale: scales with external work until the spin lock saturates
+    res = _sweep(["mcs", "cna"], THREADS_2S, TWO_SOCKET, noncs=6000, cs=300)
+    _tab("fig15: will-it-scale-like (ops/us)", res, "throughput_ops_per_us")
+    tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in res}
+    claim("fig15: both scale at low threads", tp["mcs"][2] > 2.5 * tp["mcs"][0], "")
+    claim("fig15: CNA ~ +42-57% over stock at 70 threads",
+          tp["cna"][-1] >= 1.3 * tp["mcs"][-1], f"speedup={tp['cna'][-1]/tp['mcs'][-1]:.2f}")
+
+
+def run_all():
+    res6 = fig6()
+    fig7(res6)
+    fig8(res6)
+    fig9()
+    fig10()
+    fig11()
+    fig12()
+    fig13()
+    fig15()

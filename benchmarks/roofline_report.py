@@ -1,0 +1,63 @@
+"""§Roofline table from the dry-run JSON records (single-pod per assignment)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def _fmt(x, w=10):
+    if isinstance(x, float):
+        return f"{x:{w}.3e}" if (abs(x) < 1e-3 or abs(x) >= 1e4) and x != 0 else f"{x:{w}.4f}"
+    return f"{str(x):>{w}}"
+
+
+def load(results_dir="results/dryrun", mesh="16x16"):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        r = json.load(open(f))
+        if r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def report(results_dir="results/dryrun", mesh="16x16"):
+    recs = load(results_dir, mesh)
+    hdr = ["arch", "shape", "GB/dev", "compute_s", "memory_s", "collect_s",
+           "dominant", "useful", "mfu"]
+    print(f"\n## §Roofline single-pod table (mesh {mesh})")
+    print(" | ".join(f"{h:>10}" for h in hdr))
+    for r in recs:
+        if r["status"] != "ok":
+            print(f"{r['arch']:>10} | {r['shape']:>10} | {r['status'].upper()}: {r.get('why','')[:70]}")
+            continue
+        rr = r["roofline"]
+        row = [r["arch"][:14], r["shape"], r["memory"]["peak_per_device_gb"],
+               rr["compute_s"], rr["memory_s"], rr["collective_s"],
+               rr["dominant"], rr["useful_ratio"], rr["mfu"]]
+        print(" | ".join(_fmt(x) for x in row))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        fits = sum(1 for r in ok if r["memory"]["peak_per_device_gb"] <= 16.0)
+        print(f"\ncells ok={len(ok)} skipped={len(recs)-len(ok)} fit16GB={fits}/{len(ok)}")
+
+
+def run_all():
+    import os
+
+    dirs = [
+        ("BASELINE (paper-faithful substrate, pre-§Perf)", "results/dryrun"),
+        ("OPTIMIZED (post-§Perf iterations)", "results/dryrun_opt"),
+    ]
+    any_found = False
+    for label, d in dirs:
+        if not os.path.isdir(d) or not load(d, "16x16"):
+            continue
+        any_found = True
+        print(f"\n==== {label} ====")
+        for mesh in ("16x16", "2x16x16"):
+            if load(d, mesh):
+                report(d, mesh)
+    if not any_found:
+        print("(no dry-run records; run repro.launch.dryrun first)")

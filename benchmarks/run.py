@@ -1,0 +1,69 @@
+"""Benchmark orchestrator: one section per paper table/figure + the framework
+benches (serving scheduler, collective schedules, roofline report).
+
+    PYTHONPATH=src python -m benchmarks.run [section ...]
+
+Sections: paper, locks, serving, collectives, roofline.  Default: all.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+
+def locks_hostlevel():
+    """The faithful host-threads CNA implementation under stress (GIL-bound:
+    correctness + admission-order behaviour, not wall-clock)."""
+    from repro.core.cna import CNALock, MCSLock, run_lock_stress
+
+    from .common import claim, table
+
+    rows = []
+    for name, factory in [
+        ("cna", lambda sock: CNALock(numa_node_of=sock, threshold=0xF)),
+        ("cna_opt", lambda sock: CNALock(numa_node_of=sock, threshold=0xF, shuffle_reduction=True)),
+        ("mcs", lambda sock: MCSLock()),
+    ]:
+        t0 = time.time()
+        shared = run_lock_stress(factory, n_threads=8, n_sockets=2, iters=300)
+        dt = time.time() - t0
+        ok = shared.counter == 8 * 300
+        rows.append([name, shared.counter, f"{dt:.2f}s", "OK" if ok else "RACE!"])
+        claim(f"locks: mutual exclusion holds under stress ({name})", ok,
+              f"counter={shared.counter}")
+    table("host-threads lock stress (8 threads x 300 iters, 2 virtual sockets)",
+          ["lock", "counter", "time", "status"], rows)
+
+
+def main() -> int:
+    sections = sys.argv[1:] or ["paper", "locks", "serving", "collectives", "moe_ep", "roofline"]
+    t0 = time.time()
+    if "paper" in sections:
+        from . import paper_figures
+
+        paper_figures.run_all()
+    if "locks" in sections:
+        locks_hostlevel()
+    if "serving" in sections:
+        from . import serving_bench
+
+        serving_bench.run_all()
+    if "collectives" in sections:
+        from . import collectives_bench
+
+        collectives_bench.run_all()
+    if "moe_ep" in sections:
+        from . import moe_ep_bench
+
+        moe_ep_bench.run_all()
+    if "roofline" in sections:
+        from . import roofline_report
+
+        roofline_report.run_all()
+    print(f"\n(total: {time.time() - t0:.1f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

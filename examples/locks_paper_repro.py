@@ -1,0 +1,16 @@
+"""Paper-reproduction example: regenerate the key figures from Section 7.
+
+    PYTHONPATH=src:. python examples/locks_paper_repro.py
+"""
+
+import sys
+
+sys.path.insert(0, ".")
+
+from benchmarks.paper_figures import fig6, fig8, fig9, fig10
+
+if __name__ == "__main__":
+    res = fig6()
+    fig8(res)
+    fig9()
+    fig10()

@@ -1,0 +1,13 @@
+"""Serving example (deliverable b): batched requests through the continuous-
+batching engine under CNA vs FIFO admission.
+
+    PYTHONPATH=src python examples/serve_cna.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    raise SystemExit(serve_main([
+        "--arch", "granite-3-8b", "--requests", "24", "--domains", "2",
+        "--slots", "4", "--scheduler", "both",
+    ]))

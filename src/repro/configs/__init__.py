@@ -1,0 +1,9 @@
+from .base import (  # noqa: F401
+    ARCH_IDS,
+    SHAPES,
+    ModelConfig,
+    ShapeConfig,
+    get_config,
+    get_reduced_config,
+    shape_applicable,
+)

@@ -1,0 +1,13 @@
+"""codeqwen1.5-7b [dense]: 32L d=4096 32H (kv=32) d_ff=13440 vocab=92416.
+Source: hf:Qwen/CodeQwen1.5-7B (qwen1.5 arch)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="codeqwen1.5-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv=32, d_ff=13440, vocab=92416,
+    mlp="swiglu", rope_theta=1_000_000.0, accum=2,
+)
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128,
+                          vocab=512, accum=1, attn_chunk=64)

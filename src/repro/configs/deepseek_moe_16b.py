@@ -1,0 +1,17 @@
+"""deepseek-moe-16b [moe]: 28L d=2048 16H (kv=16) vocab=102400,
+fine-grained MoE: 2 shared + 64 routed experts top-6, expert d_ff=1408
+(arXiv:2401.06066).  64 % 16 == 0 => true expert parallelism over the data
+axis.  This arch is the CNA-routing flagship (locality-aware expert bias)."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv=16, d_ff=1408, vocab=102400,
+    mlp="swiglu", n_experts=64, top_k=6, n_shared_experts=2, moe_d_ff=1408,
+    capacity_factor=1.25, first_k_dense=1, accum=2,
+)
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=3, d_model=64, n_heads=4, n_kv=4, d_ff=96,
+                          vocab=512, n_experts=8, top_k=2, n_shared_experts=1,
+                          moe_d_ff=96, first_k_dense=1, accum=1, attn_chunk=64)

@@ -1,0 +1,17 @@
+"""mixtral-8x22b [moe]: 56L d=6144 48H (GQA kv=8) d_ff=16384, 8 experts top-2,
+sliding-window attention (arXiv:2401.04088).  8 experts do not divide the
+16-way mesh axes, so experts are tensor-sharded (TP) rather than
+expert-parallel — recorded in DESIGN.md §Arch-applicability."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b", family="moe",
+    n_layers=56, d_model=6144, n_heads=48, n_kv=8, d_ff=16384, vocab=32768,
+    mlp="swiglu", window=4096, n_experts=8, top_k=2, capacity_factor=1.25,
+    accum=8,
+)
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv=2, d_ff=128,
+                          vocab=512, window=32, n_experts=4, top_k=2, accum=1,
+                          attn_chunk=32)

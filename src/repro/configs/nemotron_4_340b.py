@@ -1,0 +1,15 @@
+"""nemotron-4-340b [dense]: 96L d=18432 96H (GQA kv=8) d_ff=73728 vocab=256000.
+Squared-ReLU MLP per arXiv:2402.16819.  Optimizer moments in bf16: a 340B
+train step on a single 256-chip v5e pod cannot hold fp32 Adam moments
+(2.7 TB); see DESIGN.md and the dry-run memory analysis."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="nemotron-4-340b", family="dense",
+    n_layers=96, d_model=18432, n_heads=96, n_kv=8, d_ff=73728, vocab=256000,
+    mlp="relu2", accum=2, opt_state_dtype="bfloat16",
+)
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=96, n_heads=6, n_kv=2, d_ff=256,
+                          vocab=512, accum=2, opt_state_dtype="float32", attn_chunk=64)

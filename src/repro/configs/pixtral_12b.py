@@ -1,0 +1,15 @@
+"""pixtral-12b [vlm]: 40L d=5120 32H (GQA kv=8) d_ff=14336 vocab=131072.
+Backbone only (mistral-nemo-style decoder); the pixtral ViT frontend is a
+STUB per the assignment: input_specs() provides precomputed patch embeddings
+(batch, n_patches, d_model) consumed as a prefix."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv=8, head_dim=160, d_ff=14336,
+    vocab=131072, mlp="swiglu", rope_theta=1_000_000.0, n_patches=256, accum=4,
+)
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv=2, head_dim=16,
+                          d_ff=128, vocab=512, n_patches=8, accum=1, attn_chunk=64)

@@ -1,0 +1,13 @@
+"""stablelm-3b [dense]: 32L d=2560 32H (kv=32, i.e. MHA) d_ff=6912 vocab=50304.
+Source: hf:stabilityai/stablelm family."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=32, n_kv=32, d_ff=6912, vocab=50304,
+    mlp="swiglu", norm="layernorm", accum=1,
+)
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, d_model=64, n_heads=4, n_kv=4, d_ff=128,
+                          vocab=512, accum=1, attn_chunk=64)

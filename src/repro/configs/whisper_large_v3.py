@@ -1,0 +1,18 @@
+"""whisper-large-v3 [audio]: enc-dec, 32+32L d=1280 20H d_ff=5120 vocab=51866.
+The conv/mel frontend is a STUB per the assignment: input_specs() provides
+precomputed frame embeddings (batch, 1500, d_model); the 32-layer encoder and
+32-layer decoder (self + cross attention) are fully implemented.  Whisper uses
+absolute positions => pos="learned"."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3", family="encdec",
+    n_layers=32, d_model=1280, n_heads=20, n_kv=20, d_ff=5120, vocab=51866,
+    mlp="gelu", norm="layernorm", pos="learned", max_pos=32_768,
+    enc_layers=32, enc_seq=1500, accum=2,
+)
+
+def reduced() -> ModelConfig:
+    return CONFIG.replace(n_layers=2, enc_layers=2, d_model=64, n_heads=4,
+                          n_kv=4, d_ff=128, vocab=512, enc_seq=30, max_pos=128,
+                          accum=1, attn_chunk=32)

@@ -1,0 +1,7 @@
+# The paper's primary contribution: the CNA lock (faithful host-side
+# implementation + deterministic NUMA simulation) and its admission policy
+# lifted to TPU-pod locality domains (scheduler + collective schedules).
+from .cna import CNALock, CNANode, MCSLock, run_lock_stress  # noqa: F401
+from .policy import CNAAdmissionQueue, FIFOAdmissionQueue  # noqa: F401
+from .numasim import CostModel, Simulator, SimResult, TWO_SOCKET, FOUR_SOCKET, run_sweep  # noqa: F401
+from .locks_sim import ALL_LOCKS  # noqa: F401

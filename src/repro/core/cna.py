@@ -1,0 +1,260 @@
+"""Compact NUMA-aware lock (CNA) — faithful executable transcription of the paper.
+
+This module transcribes Figures 2-5 of Dice & Kogan, "Compact NUMA-aware Locks"
+(EuroSys 2019) into Python, line-for-line where possible.  Python has no raw
+CAS/SWAP on object attributes, so the two atomic instructions of the algorithm
+(SWAP on lock.tail in `lock`, CAS on lock.tail in `unlock`) are emulated by a
+single internal mutex guarding *only* those two operations — exactly the two
+touch points the paper identifies.  All other fields follow the paper's
+publication order.  The GIL makes wall-clock throughput meaningless here, so
+this implementation is for *algorithmic correctness* (mutual exclusion, queue
+splicing, starvation freedom); performance reproduction lives in
+``repro.core.numasim`` / ``repro.core.locks_sim``.
+
+The ``spin`` field carries, as in the paper, either 0 (wait), 1 (lock granted,
+empty secondary queue) or a reference to the head node of the secondary queue
+(lock granted, non-empty secondary queue).  In C this is pointer-stuffing into
+one word; in Python the union is explicit.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+# Long-term fairness threshold (paper Fig. 5: 0xffff).  Tests shrink it to
+# exercise the secondary-queue flush path quickly.
+THRESHOLD = 0xFFFF
+# Shuffle-reduction threshold (paper Section 6: 0xff).
+THRESHOLD2 = 0xFF
+
+
+class CNANode:
+    """Queue node (paper Fig. 2).  One per (thread, nesting level)."""
+
+    __slots__ = ("spin", "socket", "sec_tail", "next")
+
+    def __init__(self) -> None:
+        self.spin: object = 0          # 0 | 1 | CNANode (head of secondary queue)
+        self.socket: int = -1
+        self.sec_tail: CNANode | None = None
+        self.next: CNANode | None = None
+
+
+@dataclass
+class CNAStats:
+    """Optional bookkeeping used by tests/benchmarks (not part of the lock word)."""
+
+    handovers: int = 0
+    local_handovers: int = 0
+    secondary_flushes: int = 0
+    shuffles: int = 0
+
+
+class CNALock:
+    """CNA lock.  The lock *state* is one word: ``tail``.
+
+    ``numa_node_of`` maps a thread to its (virtual) NUMA node; on a real
+    machine this is ``rdtscp``/``getcpu``; here it is injectable so tests can
+    build arbitrary topologies on a single-core container.
+    """
+
+    def __init__(
+        self,
+        numa_node_of=None,
+        threshold: int = THRESHOLD,
+        shuffle_reduction: bool = False,
+        threshold2: int = THRESHOLD2,
+        seed: int = 0x5EED,
+    ) -> None:
+        self.tail: CNANode | None = None          # <-- the single word of state
+        self._atomic = threading.Lock()           # emulates SWAP/CAS only
+        self._numa_node_of = numa_node_of or (lambda: 0)
+        self._threshold = threshold
+        self._shuffle_reduction = shuffle_reduction
+        self._threshold2 = threshold2
+        self._rng = random.Random(seed)
+        self._rng_lock = threading.Lock()
+        self.stats = CNAStats()
+
+    # -- emulated atomics ---------------------------------------------------
+    def _swap_tail(self, new: CNANode | None) -> CNANode | None:
+        with self._atomic:
+            old, self.tail = self.tail, new
+            return old
+
+    def _cas_tail(self, expected: CNANode | None, new: CNANode | None) -> bool:
+        with self._atomic:
+            if self.tail is expected:
+                self.tail = new
+                return True
+            return False
+
+    def _pseudo_rand(self) -> int:
+        with self._rng_lock:
+            return self._rng.getrandbits(30)
+
+    # -- paper Fig. 3: cna_lock ---------------------------------------------
+    def acquire(self, me: CNANode) -> None:
+        me.next = None                             # L2
+        me.socket = -1                             # L3
+        me.spin = 0                                # L4
+        tail = self._swap_tail(me)                 # L6  (the one atomic)
+        if tail is None:                           # L8: no one there?
+            me.spin = 1
+            return
+        me.socket = self._numa_node_of()           # L10
+        tail.next = me                             # L11
+        while me.spin == 0:                        # L13: local spinning
+            time.sleep(0)                          # CPU_PAUSE under the GIL
+
+    # -- paper Fig. 5 auxiliaries --------------------------------------------
+    def _keep_lock_local(self) -> bool:            # L77
+        return bool(self._pseudo_rand() & self._threshold)
+
+    def _find_successor(self, me: CNANode) -> CNANode | None:  # L51-74
+        nxt = me.next
+        my_socket = me.socket
+        if my_socket == -1:                        # L54
+            my_socket = self._numa_node_of()
+        if nxt.socket == my_socket:                # L56: immediate successor local
+            return nxt
+        sec_head = nxt                             # L57
+        sec_tail = nxt                             # L58
+        cur = nxt.next                             # L59
+        while cur is not None:                     # L61: traverse main queue
+            if cur.socket == my_socket:            # L63
+                if isinstance(me.spin, CNANode):   # L64: secondary queue non-empty
+                    me.spin.sec_tail.next = sec_head  # L65
+                else:
+                    me.spin = sec_head             # L66
+                sec_tail.next = None               # L67
+                me.spin.sec_tail = sec_tail        # L68
+                self.stats.shuffles += 1
+                return cur                         # L69
+            sec_tail = cur                         # L71
+            cur = cur.next                         # L72
+        return None                                # L74
+
+    # -- paper Fig. 4: cna_unlock --------------------------------------------
+    def release(self, me: CNANode) -> None:
+        if me.next is None:                        # L18: successor in main queue?
+            if me.spin == 1:                       # L20: secondary queue empty?
+                if self._cas_tail(me, None):       # L23
+                    return
+            else:
+                sec_head = me.spin                 # L27
+                if self._cas_tail(me, sec_head.sec_tail):  # L28
+                    sec_head.spin = 1              # L31: pass lock to sec. head
+                    self.stats.handovers += 1
+                    self.stats.secondary_flushes += 1
+                    return
+            while me.next is None:                 # L36: wait for successor link
+                time.sleep(0)
+
+        # Section 6 shuffle-reduction optimization (between L37 and L38).
+        if (
+            self._shuffle_reduction
+            and me.spin == 1
+            and (self._pseudo_rand() & self._threshold2)
+        ):
+            me.next.spin = 1
+            self.stats.handovers += 1
+            return
+
+        # L40-49: determine next lock holder.
+        succ = None
+        if self._keep_lock_local():
+            succ = self._find_successor(me)        # L41
+        if succ is not None:
+            succ.spin = me.spin                    # L42 (never 0: me.spin is 1 or node)
+            self.stats.handovers += 1
+            self.stats.local_handovers += 1
+        elif isinstance(me.spin, CNANode):         # L43: secondary queue non-empty
+            succ = me.spin                         # L44
+            succ.sec_tail.next = me.next           # L45: splice sec. queue in front
+            succ.spin = 1                          # L46
+            self.stats.handovers += 1
+            self.stats.secondary_flushes += 1
+        else:
+            me.next.spin = 1                       # L48
+            self.stats.handovers += 1
+
+
+class MCSLock:
+    """Classic MCS lock (Mellor-Crummey & Scott 1991) — the paper's baseline."""
+
+    def __init__(self) -> None:
+        self.tail: CNANode | None = None
+        self._atomic = threading.Lock()
+
+    def acquire(self, me: CNANode) -> None:
+        me.next = None
+        me.spin = 0
+        with self._atomic:
+            tail, self.tail = self.tail, me
+        if tail is None:
+            me.spin = 1
+            return
+        tail.next = me
+        while me.spin == 0:
+            time.sleep(0)
+
+    def release(self, me: CNANode) -> None:
+        if me.next is None:
+            with self._atomic:
+                if self.tail is me:
+                    self.tail = None
+                    return
+            while me.next is None:
+                time.sleep(0)
+        me.next.spin = 1
+
+
+@dataclass
+class _Shared:
+    counter: int = 0
+    per_thread: dict = field(default_factory=dict)
+
+
+def run_lock_stress(
+    lock_factory,
+    n_threads: int,
+    n_sockets: int,
+    iters: int,
+    *,
+    cs_work: int = 0,
+) -> _Shared:
+    """Drive ``n_threads`` through acquire/CS/release cycles; return the shared
+    cell for invariant checking (counter == n_threads * iters proves mutual
+    exclusion held for the increment sequence)."""
+
+    tls = threading.local()
+
+    def socket_of() -> int:
+        return tls.socket
+
+    lock = lock_factory(socket_of)
+    shared = _Shared()
+
+    def body(tid: int) -> None:
+        tls.socket = tid % n_sockets
+        node = CNANode()
+        for _ in range(iters):
+            lock.acquire(node)
+            # critical section: racy read-modify-write, only safe under mutex
+            v = shared.counter
+            for _ in range(cs_work):
+                pass
+            shared.counter = v + 1
+            shared.per_thread[tid] = shared.per_thread.get(tid, 0) + 1
+            lock.release(node)
+
+    threads = [threading.Thread(target=body, args=(i,)) for i in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return shared

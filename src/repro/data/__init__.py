@@ -1,0 +1,1 @@
+from .pipeline import BigramLMDataset, UniformLMDataset, ShardedLoader  # noqa: F401

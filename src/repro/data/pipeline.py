@@ -1,0 +1,101 @@
+"""Deterministic, resumable, shard-aware synthetic data pipeline.
+
+Every batch is a pure function of ``(seed, step)`` — there is no consumable
+iterator state, so:
+
+  * **resume** after restart is exact: restore ``step`` from the checkpoint
+    and the stream continues bit-for-bit (tested);
+  * **sharding** is by index arithmetic: host h of H materialises rows
+    ``[h*B/H, (h+1)*B/H)`` of the global batch — no coordination, no overlap;
+  * **elastic rescale** (H changes) re-partitions the same global stream, so
+    a 2-pod run restarted on 1 pod sees identical global batches (tested).
+
+``BigramLMDataset`` draws token streams from a fixed random bigram chain so
+that a small LM has learnable structure (examples/train_lm.py shows the loss
+dropping toward the chain's conditional entropy); ``UniformLMDataset`` is
+i.i.d. uniform (pure-throughput benchmarks).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class _Spec:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int
+
+
+class UniformLMDataset:
+    """i.i.d. uniform tokens.  batch(step) -> {tokens, labels} (B, S) int32."""
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int, seed: int = 0):
+        self.spec = _Spec(vocab, seq_len, global_batch, seed)
+
+    def batch(self, step: int, *, host: int = 0, n_hosts: int = 1) -> dict:
+        sp = self.spec
+        assert sp.global_batch % n_hosts == 0
+        rows = sp.global_batch // n_hosts
+        rng = np.random.Generator(np.random.Philox(key=sp.seed, counter=step))
+        toks = rng.integers(0, sp.vocab, (sp.global_batch, sp.seq_len + 1), dtype=np.int32)
+        toks = toks[host * rows : (host + 1) * rows]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class BigramLMDataset:
+    """Tokens from a fixed random bigram chain (learnable structure).
+
+    The transition table is derived from ``seed`` alone; batches are a pure
+    function of (seed, step).  ``branching`` next-token candidates per token
+    => conditional entropy = log(branching) nats (the loss floor)."""
+
+    def __init__(self, vocab: int, seq_len: int, global_batch: int, seed: int = 0, branching: int = 8):
+        self.spec = _Spec(vocab, seq_len, global_batch, seed)
+        self.branching = branching
+        table_rng = np.random.Generator(np.random.Philox(key=seed ^ 0xB16A))
+        self.table = table_rng.integers(0, vocab, (vocab, branching), dtype=np.int32)
+
+    @property
+    def entropy_floor(self) -> float:
+        return float(np.log(self.branching))
+
+    def batch(self, step: int, *, host: int = 0, n_hosts: int = 1) -> dict:
+        sp = self.spec
+        assert sp.global_batch % n_hosts == 0
+        rows = sp.global_batch // n_hosts
+        rng = np.random.Generator(np.random.Philox(key=sp.seed, counter=step))
+        start = rng.integers(0, sp.vocab, (sp.global_batch,), dtype=np.int32)
+        picks = rng.integers(0, self.branching, (sp.global_batch, sp.seq_len), dtype=np.int32)
+        toks = np.empty((sp.global_batch, sp.seq_len + 1), np.int32)
+        toks[:, 0] = start
+        for t in range(sp.seq_len):
+            toks[:, t + 1] = self.table[toks[:, t], picks[:, t]]
+        toks = toks[host * rows : (host + 1) * rows]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class ShardedLoader:
+    """Host-local view of a dataset + the resume/rescale bookkeeping."""
+
+    def __init__(self, dataset, *, host: int = 0, n_hosts: int = 1, start_step: int = 0):
+        self.dataset = dataset
+        self.host = host
+        self.n_hosts = n_hosts
+        self.step = start_step
+
+    def __next__(self) -> dict:
+        b = self.dataset.batch(self.step, host=self.host, n_hosts=self.n_hosts)
+        self.step += 1
+        return b
+
+    def state(self) -> dict:
+        return {"step": self.step}
+
+    @classmethod
+    def resume(cls, dataset, state: dict, *, host: int = 0, n_hosts: int = 1):
+        return cls(dataset, host=host, n_hosts=n_hosts, start_step=state["step"])

@@ -1,0 +1,1 @@
+from .ops import linear_scan  # noqa: F401

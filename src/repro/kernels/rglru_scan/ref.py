@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for the gated linear-recurrence scan."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def linear_scan_ref(a: jax.Array, b: jax.Array, h0: jax.Array) -> jax.Array:
+    """h_t = a_t * h_{t-1} + b_t.  a/b: (B, S, W); h0: (B, W) -> (B, S, W)."""
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                         (jnp.moveaxis(a, 1, 0).astype(jnp.float32),
+                          jnp.moveaxis(b, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(hs, 0, 1)

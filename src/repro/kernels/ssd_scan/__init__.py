@@ -1,0 +1,1 @@
+from .ops import ssd_intra  # noqa: F401

@@ -1,0 +1,16 @@
+"""jit wrapper for the SSD intra-chunk kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import ssd_intra_bchlpn
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_intra(xc, dac, bc, cc, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return ssd_intra_bchlpn(xc, dac, bc, cc, interpret=interpret)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the SSD intra-chunk kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _segsum(x):
+    l = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_intra_ref(xc, dac, bc, cc):
+    """Intra-chunk SSD term.
+
+    xc:  (B, nc, L, H, P)  dt-weighted inputs
+    dac: (B, H, nc, L)     dt * A
+    bc:  (B, nc, L, N)
+    cc:  (B, nc, L, N)
+    ->   (B, nc, L, H, P)
+    """
+    lmat = jnp.exp(_segsum(dac.astype(jnp.float32)))
+    return jnp.einsum(
+        "bcln,bcsn,bhcls,bcshp->bclhp",
+        cc.astype(jnp.float32), bc.astype(jnp.float32), lmat, xc.astype(jnp.float32),
+    )

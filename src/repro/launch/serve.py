@@ -1,0 +1,70 @@
+"""Serving driver: continuous batching with the CNA admission scheduler.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
+        --requests 32 --domains 2 --scheduler cna
+
+Prints per-policy throughput/locality/fairness so the CNA-vs-FIFO trade-off
+is visible on a real (reduced-config) model.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_reduced_config
+from repro.models.registry import build_model
+from repro.serving.engine import DecodeEngine, Request
+from repro.serving.scheduler import CNAScheduler, FIFOScheduler
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--domains", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=6)
+    ap.add_argument("--cache-len", type=int, default=64)
+    ap.add_argument("--scheduler", default="both", choices=["cna", "fifo", "both"])
+    ap.add_argument("--fairness-threshold", type=lambda x: int(x, 0), default=0xF)
+    ap.add_argument("--switch-cost", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    arch = args.arch.replace("-", "_").replace(".", "")
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    base = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, args.prompt_len).astype(np.int32),
+                max_new=args.max_new, domain=int(rng.integers(0, args.domains)))
+        for i in range(args.requests)
+    ]
+
+    policies = {"cna": lambda: CNAScheduler(fairness_threshold=args.fairness_threshold),
+                "fifo": lambda: FIFOScheduler()}
+    run = [args.scheduler] if args.scheduler != "both" else ["cna", "fifo"]
+    for name in run:
+        reqs = [Request(r.rid, r.prompt, r.max_new, r.domain) for r in base]
+        eng = DecodeEngine(model, params, n_slots=args.slots, cache_len=args.cache_len,
+                           scheduler=policies[name](), domain_switch_cost=args.switch_cost)
+        t0 = time.time()
+        eng.run(reqs)
+        wall = time.time() - t0
+        m = eng.scheduler.metrics
+        tokens = sum(len(r.out) for r in reqs)
+        print(f"[{name}] requests={len(reqs)} tokens={tokens} sim_time={eng.sim_time} "
+              f"locality={m.locality:.2f} switches={m.domain_switches} "
+              f"fairness={m.fairness_factor():.3f} wall={wall:.1f}s "
+              f"tok_per_simtick={tokens / max(1, eng.sim_time):.2f}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,402 @@
+"""Attention: GQA/MQA, causal + sliding-window, three implementations.
+
+Implementations (selected by ``cfg.attn_impl``):
+
+  * ``xla``      — plain masked einsum.  O(S^2) score tensor; used by smoke
+                   tests and short sequences.
+  * ``chunked``  — block-streamed online-softmax over KV chunks via
+                   ``lax.scan``; never materialises more than
+                   (B, H, S_q, chunk) scores.  This is the dry-run/default
+                   path for 32k prefill.  Computes full S_q x S_kv masked
+                   (2x causal waste — see ``triangular`` for the fix).
+  * ``triangular`` — block-causal pair scan: iterates only the
+                   lower-triangular (q_chunk, kv_chunk) block pairs (plus the
+                   sliding-window band when ``window`` is set), so HLO FLOPs
+                   match causal-useful FLOPs.  This is perf-iteration #1 in
+                   EXPERIMENTS.md §Perf.
+  * ``pallas``   — the flash-attention Pallas kernel (TPU target; validated
+                   with interpret=True on CPU).  See repro/kernels/flash_attention.
+
+All entry points take q: (B, S_q, H, hd), k/v: (B, S_kv, Hkv, hd) and handle
+GQA by repeating KV heads (keeps GSPMD head-sharding propagation trivial; the
+Pallas kernel instead indexes KV heads directly, avoiding the materialised
+repeat on the real hardware path).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import shard
+
+NEG_INF = -1e30
+
+
+def repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B, S, Hkv, hd) -> (B, S, H, hd) by repeating each KV head H/Hkv times."""
+    b, s, hkv, hd = k.shape
+    if hkv == n_heads:
+        return k
+    rep = n_heads // hkv
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, rep, hd))
+    return k.reshape(b, s, n_heads, hd)
+
+
+def _band_mask(q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int):
+    """Boolean mask (..., S_q, S_kv): True = attend."""
+    diff = q_pos[..., :, None] - k_pos[..., None, :]
+    mask = jnp.ones(diff.shape, dtype=bool)
+    if causal:
+        mask &= diff >= 0
+    if window > 0:
+        mask &= diff < window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# xla: plain masked attention (oracle + short-seq path)
+# ---------------------------------------------------------------------------
+
+def _group_q(q: jax.Array, hkv: int) -> jax.Array:
+    """(B, S, H, hd) -> (B, S, Hkv, G, hd).  All attention math is grouped:
+    K/V are never repeated to H heads — the repeat's broadcast forced GSPMD
+    into 'involuntary full rematerialization' (replicate + repartition) of
+    full (B,S,H,hd) fp32 tensors inside every KV chunk step (EXPERIMENTS.md
+    §Perf, the single biggest train-memory bug)."""
+    b, s, h, hd = q.shape
+    return q.reshape(b, s, hkv, h // hkv, hd)
+
+
+def attn_xla(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Reference attention.  q_offset shifts query positions (decode/chunks)."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    qg = _group_q(q * jnp.asarray(scale, q.dtype), hkv)
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(k.dtype), k, preferred_element_type=jnp.float32
+    )
+    q_pos = jnp.arange(sq) + q_offset
+    k_pos = jnp.arange(skv)
+    mask = _band_mask(q_pos, k_pos, causal, window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p.astype(v.dtype), v, preferred_element_type=jnp.float32
+    )
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked: online-softmax streamed over KV chunks (full-Q)
+# ---------------------------------------------------------------------------
+
+def attn_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Stream KV in chunks with a running (max, denom, acc) online softmax.
+
+    Peak intermediate: (B, H, S_q, chunk) fp32 scores per scan step.
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    chunk = min(chunk, skv)
+    if skv % chunk != 0:  # pad KV to a chunk multiple with masked-out tail
+        pad = chunk - skv % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_valid = skv
+        skv = skv + pad
+    else:
+        kv_valid = skv
+    n_chunks = skv // chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = _group_q(q * jnp.asarray(scale, q.dtype), hkv)      # (b, sq, kv, g, hd)
+    kc = k.reshape(b, n_chunks, chunk, hkv, hd)
+    vc = v.reshape(b, n_chunks, chunk, hkv, hd)
+    q_pos = jnp.arange(sq) + q_offset
+
+    def step(carry, inp):
+        m, l, acc = carry
+        kj, vj, j = inp                                       # (b, chunk, kv, hd)
+        k_pos = j * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(kj.dtype), kj,
+                       preferred_element_type=jnp.float32)
+        mask = _band_mask(q_pos, k_pos, causal, window) & (k_pos < kv_valid)[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: exp(NEG_INF - NEG_INF) would be 1
+        alpha = jnp.exp(jnp.where(m > NEG_INF / 2, m - m_new, NEG_INF))
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    # remat each KV-chunk step: without this the backward saves per-chunk
+    # (B,H,Sq,chunk) fp32 score/probability residuals — O(S^2) bytes per layer
+    # (measured: the dominant memory-roofline term across every train/prefill
+    # cell, EXPERIMENTS.md §Perf iteration 1).  With it, only the O(S) carry
+    # survives and scores are recomputed in the backward — the flash strategy.
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (m, l, acc), _ = jax.lax.scan(
+        step,
+        (m0, l0, acc0),
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0), jnp.arange(n_chunks)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]              # (b, kv, g, sq, hd)
+    return jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# triangular: block-causal pair scan — HLO FLOPs == causal-useful FLOPs
+# ---------------------------------------------------------------------------
+
+def _block_pairs(n: int, window_blocks: int) -> tuple[list[int], list[int]]:
+    """Static (i, j) pairs of (q_block, kv_block) with j <= i and, when a
+    sliding window is set, i - j <= window_blocks.  Ordered by i then j so the
+    running softmax stats for q-block i are contiguous."""
+    qs, ks = [], []
+    for i in range(n):
+        j0 = 0 if window_blocks <= 0 else max(0, i - window_blocks)
+        for j in range(j0, i + 1):
+            qs.append(i)
+            ks.append(j)
+    return qs, ks
+
+
+def attn_triangular(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Block-causal attention: scan over only the needed (q, kv) block pairs.
+
+    Requires S_q == S_kv (self-attention prefill/train) and q_offset == 0;
+    falls back to ``attn_chunked`` otherwise.  Compared to ``attn_chunked``
+    this halves matmul FLOPs for causal full attention and cuts them to
+    O(S * window) for sliding-window attention.
+    """
+    b, sq, h, hd = q.shape
+    skv = k.shape[1]
+    if (not causal) or sq != skv or q_offset != 0 or sq % min(chunk, sq) != 0:
+        return attn_chunked(q, k, v, causal=causal, window=window, chunk=chunk, q_offset=q_offset)
+    chunk = min(chunk, sq)
+    n = sq // chunk
+    wb = 0 if window <= 0 else (window + chunk - 1) // chunk
+    qi, kj = _block_pairs(n, wb)
+    hkv = k.shape[2]
+    g = h // hkv
+
+    scale = 1.0 / math.sqrt(hd)
+    qc = _group_q(q * jnp.asarray(scale, q.dtype), hkv).reshape(b, n, chunk, hkv, g, hd)
+    kc = k.reshape(b, n, chunk, hkv, hd)
+    vc = v.reshape(b, n, chunk, hkv, hd)
+
+    rel = jnp.arange(chunk)[:, None] - jnp.arange(chunk)[None, :]
+
+    def step(carry, inp):
+        m, l, acc, out = carry
+        i, j, is_first, is_last = inp
+        qb = jax.lax.dynamic_index_in_dim(qc, i, 1, keepdims=False)  # (b, chunk, kv, g, hd)
+        kb = jax.lax.dynamic_index_in_dim(kc, j, 1, keepdims=False)
+        vb = jax.lax.dynamic_index_in_dim(vc, j, 1, keepdims=False)
+        # reset stats at the first block of each q-row
+        m = jnp.where(is_first, NEG_INF, m)
+        l = jnp.where(is_first, 0.0, l)
+        acc = jnp.where(is_first, 0.0, acc)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qb.astype(kb.dtype), kb,
+                       preferred_element_type=jnp.float32)
+        diff = (i - j) * chunk + rel
+        mask = diff >= 0
+        if window > 0:
+            mask &= diff < window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(jnp.where(m > NEG_INF / 2, m - m_new, NEG_INF))
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        blk = acc_new / jnp.maximum(l_new, 1e-30)[..., None]
+        out = jax.lax.cond(
+            is_last,
+            lambda o: jax.lax.dynamic_update_index_in_dim(o, blk.astype(out.dtype), i, 1),
+            lambda o: o,
+            out,
+        )
+        return (m_new, l_new, acc_new, out), None
+
+    m0 = jnp.full((b, hkv, g, chunk), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, chunk), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, chunk, hd), jnp.float32)
+    out0 = jnp.zeros((b, n, hkv, g, chunk, hd), jnp.float32)
+    qi_a = jnp.array(qi, jnp.int32)
+    kj_a = jnp.array(kj, jnp.int32)
+    first = jnp.array([jj == (0 if wb <= 0 else max(0, ii - wb)) for ii, jj in zip(qi, kj)])
+    last = jnp.array([ii == jj for ii, jj in zip(qi, kj)])
+    # remat per block pair (see attn_chunked): O(chunk^2) recompute, O(chunk) saves
+    step = jax.checkpoint(step, policy=jax.checkpoint_policies.nothing_saveable)
+    (_, _, _, out), _ = jax.lax.scan(step, (m0, l0, acc0, out0), (qi_a, kj_a, first, last))
+    # (b, n, kv, g, chunk, hd) -> (b, n, chunk, kv, g, hd) -> (b, sq, h, hd)
+    out = jnp.transpose(out, (0, 1, 4, 2, 3, 5)).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decode: one new token against a (possibly ring-buffered) KV cache
+# ---------------------------------------------------------------------------
+
+def attn_decode(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cur_len: jax.Array,
+    *,
+    window: int = 0,
+    ring: bool = False,
+    extra_kv: tuple[jax.Array, jax.Array] | None = None,
+) -> jax.Array:
+    """q: (B, 1, H, hd); caches: (B, S_max, Hkv, hd); cur_len: () or (B,)
+    number of valid positions *including* the token just written.
+
+    ``ring`` marks a sliding-window ring buffer: all S_max slots are valid
+    once cur_len >= S_max and the window test is carried by the buffer size
+    itself (positions are not ordered, softmax is order-invariant).
+
+    ``extra_kv``: (k_new, v_new) of shape (B, 1, Hkv, hd) — the *current*
+    token's K/V, attended alongside the cache.  Passing it here (instead of
+    writing it into the cache first) keeps the cache read-only inside the
+    decode layer scan, so the single in-place cache update happens once per
+    step outside the loop (EXPERIMENTS.md §Perf decode iteration 3).
+    """
+    b, sq, h, hd = q.shape
+    s_max = k_cache.shape[1]
+    hkv = k_cache.shape[2]
+    g = h // hkv
+    scale = 1.0 / math.sqrt(hd)
+    with jax.named_scope("fa_kernel_region"):
+        # grouped einsum — no materialised repeat of K/V to H heads (the
+        # repeat forced an involuntary GSPMD reshard + an H/Hkv-times larger
+        # KV stream), and no fp32 upcast of the cache: the QK/PV matmuls run
+        # on the cache dtype with fp32 accumulation (MXU-native bf16xbf16
+        # ->f32), which removed a per-layer fp32 KV copy worth ~3x the cache
+        # (EXPERIMENTS.md §Perf decode iteration).
+        qg = (q * jnp.asarray(scale, q.dtype)).reshape(b, sq, hkv, g, hd)
+        s = jnp.einsum(
+            "bqkgd,bskd->bkgqs", qg.astype(k_cache.dtype), k_cache,
+            preferred_element_type=jnp.float32,
+        )
+        k_pos = jnp.arange(s_max)
+        cur = jnp.asarray(cur_len)
+        cur = cur[..., None, None, None, None] if cur.ndim else cur
+        if ring:
+            valid = k_pos < jnp.minimum(cur, s_max)
+            if extra_kv is not None:
+                # the slot the new token will occupy still holds the token
+                # that just left the window — mask it out
+                stale = (k_pos == jnp.mod(cur, s_max)) & (cur >= s_max)
+                valid = valid & ~stale
+        else:
+            valid = k_pos < cur
+            if window > 0:
+                valid = valid & (k_pos >= (cur - window))
+        valid = jnp.broadcast_to(valid, s.shape) if valid.ndim == s.ndim else valid[None, None, None, None, :]
+        s = jnp.where(valid, s, NEG_INF)
+        if extra_kv is not None:
+            # merge the current token by a two-part online softmax rather than
+            # concatenating a column: concat makes the score dim S+1, which
+            # breaks the even kv_seq sharding and made GSPMD all-gather the
+            # whole V cache per layer (40 GiB/token on granite decode).
+            k_new, v_new = extra_kv
+            s_self = jnp.einsum(
+                "bqkgd,bskd->bkgqs", qg.astype(k_new.dtype), k_new,
+                preferred_element_type=jnp.float32,
+            )                                             # (b, kv, g, 1, 1)
+            m = jnp.maximum(jnp.max(s, axis=-1, keepdims=True), s_self)
+            p = jnp.exp(s - m)
+            p_self = jnp.exp(s_self - m)
+            denom = jnp.sum(p, axis=-1, keepdims=True) + p_self
+            out = jnp.einsum(
+                "bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                preferred_element_type=jnp.float32,
+            ) + jnp.einsum(
+                "bkgqs,bskd->bqkgd", p_self.astype(v_new.dtype), v_new,
+                preferred_element_type=jnp.float32,
+            )
+            # denom (b, kv, g, q, 1) -> (b, q, kv, g, 1) to divide out (b,q,kv,g,d)
+            out = out / jnp.moveaxis(denom[..., 0], -1, 1)[..., None]
+        else:
+            p = jax.nn.softmax(s, axis=-1)
+            out = jnp.einsum(
+                "bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+                preferred_element_type=jnp.float32,
+            )
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dispatcher
+# ---------------------------------------------------------------------------
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    impl: str = "chunked",
+    causal: bool = True,
+    window: int = 0,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """The ``fa_kernel_region`` scope marks this computation as the body of
+    the flash-attention Pallas kernel on the TPU target: the roofline's
+    byte model treats everything inside as VMEM-resident (boundary tensors
+    q/k/v/o are charged at the producing/consuming ops outside)."""
+    q = shard(q, "batch", None, "heads", None)
+    with jax.named_scope("fa_kernel_region"):
+        if impl == "xla" or q.shape[1] <= chunk:
+            out = attn_xla(q, k, v, causal=causal, window=window, q_offset=q_offset)
+        elif impl == "triangular":
+            out = attn_triangular(q, k, v, causal=causal, window=window, chunk=chunk, q_offset=q_offset)
+        elif impl == "pallas":
+            from repro.kernels.flash_attention import ops as fa_ops
+
+            out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+        else:
+            out = attn_chunked(q, k, v, causal=causal, window=window, chunk=chunk, q_offset=q_offset)
+    return shard(out, "batch", None, "heads", None)

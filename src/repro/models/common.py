@@ -1,0 +1,177 @@
+"""Shared layers: norms, rotary embeddings, initializers, param declaration."""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import shard
+
+Param = dict  # params are plain pytrees: dict leaves = jnp arrays
+# logical-axes trees mirror the param tree with tuples of axis names.
+
+
+class ParamBuilder:
+    """Collects (shape, logical_axes, init) declarations, then materialises
+    either real params (init) or abstract params (eval_shape for the dry-run).
+    """
+
+    def __init__(self, dtype=jnp.bfloat16):
+        self.dtype = dtype
+        self.shapes: dict = {}
+        self.logical: dict = {}
+        self.inits: dict = {}
+
+    def declare(self, tree_path: str, shape, logical, init="normal", scale=None):
+        assert tree_path not in self.shapes, tree_path
+        self.shapes[tree_path] = tuple(shape)
+        self.logical[tree_path] = tuple(logical)
+        self.inits[tree_path] = (init, scale)
+
+    def _init_leaf(self, key, path):
+        shape = self.shapes[path]
+        kind, scale = self.inits[path]
+        if kind == "zeros":
+            return jnp.zeros(shape, self.dtype)
+        if kind == "ones":
+            return jnp.ones(shape, self.dtype)
+        if kind == "normal":
+            s = scale if scale is not None else (1.0 / math.sqrt(shape[-2] if len(shape) >= 2 else shape[-1]))
+            return (jax.random.normal(key, shape, jnp.float32) * s).astype(self.dtype)
+        if kind == "uniform":
+            s = scale or 1.0
+            return jax.random.uniform(key, shape, jnp.float32, -s, s).astype(self.dtype)
+        if kind == "rglru_a":
+            # Λ such that a = sigmoid(Λ) in [0.9, 0.999]
+            u = jax.random.uniform(key, shape, jnp.float32, 0.9, 0.999)
+            return jnp.log(u / (1 - u)).astype(jnp.float32)
+        if kind == "ssm_a":
+            u = jax.random.uniform(key, shape, jnp.float32, 1.0, 16.0)
+            return jnp.log(u).astype(jnp.float32)
+        if kind == "dt_bias":
+            u = jax.random.uniform(key, shape, jnp.float32)
+            dt = jnp.exp(u * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+            return (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32)
+        raise ValueError(kind)
+
+    @staticmethod
+    def _nest(flat: dict) -> dict:
+        out: dict = {}
+        for path, v in flat.items():
+            node = out
+            parts = path.split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = v
+        return out
+
+    def init(self, key) -> dict:
+        keys = jax.random.split(key, len(self.shapes))
+        flat = {p: self._init_leaf(k, p) for k, p in zip(keys, sorted(self.shapes))}
+        return self._nest(flat)
+
+    def abstract(self) -> dict:
+        flat = {
+            p: jax.ShapeDtypeStruct(
+                self.shapes[p],
+                jnp.float32 if self.inits[p][0] in ("rglru_a", "ssm_a", "dt_bias") else self.dtype,
+            )
+            for p in self.shapes
+        }
+        return self._nest(flat)
+
+    def logical_tree(self) -> dict:
+        return self._nest(dict(self.logical))
+
+
+@jax.custom_vjp
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Embedding lookup whose backward is partitioner-friendly.
+
+    The plain gather's backward is a scatter-add producing a *full unsharded
+    fp32* table gradient on every chip (17.6 GiB + an equal-sized all-reduce
+    for nemotron's 256k x 18432 table).  The custom backward computes the
+    gradient as a one-hot contraction — a dot the partitioner shards along
+    (vocab->model, fsdp->data) like the table itself."""
+    return table[tokens]
+
+
+def _embed_fwd(table, tokens):
+    # dtype token: residuals must be jax types, not dtypes
+    return table[tokens], (tokens, jnp.zeros((0, table.shape[0]), table.dtype))
+
+
+def _embed_bwd(res, dy):
+    tokens, token_arr = res
+    vocab = token_arr.shape[1]
+    onehot = jax.nn.one_hot(tokens, vocab, dtype=dy.dtype)
+    dtable = jnp.einsum("...v,...d->vd", onehot, dy)
+    dtable = shard(dtable, "vocab", "fsdp")
+    return dtable.astype(token_arr.dtype), None
+
+
+embed_lookup.defvjp(_embed_fwd, _embed_bwd)
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array | None = None, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x * (1.0 + scale.astype(jnp.float32))
+    if bias is not None:
+        x = x + bias.astype(jnp.float32)
+    return x.astype(dt)
+
+
+def norm(kind: str, x, scale, bias=None):
+    if kind == "rmsnorm":
+        return rmsnorm(x, scale)
+    return layernorm(x, scale, bias)
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions: (...,) int32 -> cos/sin of shape (..., head_dim//2)."""
+    half = head_dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, S, H, hd); cos/sin: (B?, S, hd//2) broadcastable."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]  # (B, S, 1, hd//2)
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int, mask=None):
+    """logits (..., Vpad) fp32-safe CE; labels int32; mask optional weights.
+    Vocab-parallel: the max/sum reductions over the sharded vocab axis lower
+    to psums over 'model' (Megatron-style parallel CE)."""
+    logits = logits.astype(jnp.float32)
+    logits = shard(logits, "batch", None, "vocab")
+    m = jax.lax.stop_gradient(jnp.max(logits, axis=-1, keepdims=True))
+    shifted = logits - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    gold = jnp.take_along_axis(shifted, labels[..., None].astype(jnp.int32), axis=-1)[..., 0] + m[..., 0]
+    nll = lse - gold
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

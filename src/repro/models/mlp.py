@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU / GEGLU / GELU / squared-ReLU (nemotron)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder
+from .sharding import shard
+
+
+def declare_mlp(pb: ParamBuilder, prefix: str, d_model: int, d_ff: int, kind: str, stack: int = 0):
+    """Declare FFN params under ``prefix``; optional leading stack dim."""
+    lead = (stack,) if stack else ()
+    lax = ("layers",) if stack else ()
+    gated = kind in ("swiglu", "geglu")
+    pb.declare(f"{prefix}/wi", lead + (d_model, d_ff), lax + ("fsdp", "mlp"))
+    if gated:
+        pb.declare(f"{prefix}/wg", lead + (d_model, d_ff), lax + ("fsdp", "mlp"))
+    pb.declare(f"{prefix}/wo", lead + (d_ff, d_model), lax + ("mlp", "fsdp"))
+
+
+def mlp_apply(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    """x: (B, S, D).  Hidden activations sharded on the 'mlp' logical axis."""
+    h = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    h = shard(h, "batch", None, "mlp")
+    if kind == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    elif kind == "geglu":
+        g = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = jax.nn.gelu(g.astype(jnp.float32), approximate=True).astype(h.dtype) * h
+    elif kind == "gelu":
+        h = jax.nn.gelu(h.astype(jnp.float32), approximate=True).astype(h.dtype)
+    elif kind == "relu2":  # nemotron-4: squared ReLU
+        h = jnp.square(jax.nn.relu(h.astype(jnp.float32))).astype(h.dtype)
+    else:
+        raise ValueError(kind)
+    out = jnp.einsum("bsf,fd->bsd", h, params["wo"])
+    return shard(out, "batch", "seq", "embed")

@@ -1,0 +1,131 @@
+"""Mixture-of-Experts: top-k routing with capacity, sort-based dispatch.
+
+Baseline ("tp") dispatch is *local*: every token is dispatched into an
+(E, C, D) buffer within its own batch shard — no token ever crosses a data
+shard — and expert FFN weights are sharded over ('expert'->data storage,
+'mlp'->model compute), so GSPMD turns the expert matmul into an FSDP-style
+all-gather + TP matmul.  An explicit expert-parallel (EP) all-to-all variant
+lives in ``repro.models.moe_ep`` and is used in §Perf.
+
+Routing is deterministic: per-sequence-row capacity C = ceil(S*k*cf/E);
+positions inside each expert's buffer are ranks from a stable argsort of the
+expert assignments (earlier tokens win slots; later ones drop — the standard
+token-dropping discipline).  The backward of scatter/gather is gather/scatter,
+so the whole thing is autodiff-clean.
+
+CNA locality routing (beyond-paper, ``cfg.cna_routing``): the paper's
+main-queue preference, applied to the router — each token gets a bounded
+additive bias toward experts whose home shard matches the token's home shard
+(main queue = local experts, secondary = remote).  The load-balancing aux loss
+plays the role of the fairness threshold: remote experts keep receiving
+tokens, so no expert starves.  Under EP this directly cuts all-to-all bytes;
+measured in benchmarks/moe_locality.py.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder
+from .mlp import declare_mlp, mlp_apply
+from .sharding import shard
+
+
+def moe_capacity(seq: int, top_k: int, n_experts: int, cf: float) -> int:
+    c = int(math.ceil(seq * top_k * cf / n_experts))
+    return max(4, (c + 3) // 4 * 4)  # pad to a multiple of 4 lanes
+
+
+def declare_moe(pb: ParamBuilder, prefix: str, cfg, stack: int = 0):
+    lead = (stack,) if stack else ()
+    lax = ("layers",) if stack else ()
+    d, e = cfg.d_model, cfg.n_experts
+    eff = cfg.moe_d_ff or cfg.d_ff
+    pb.declare(f"{prefix}/router", lead + (d, e), lax + (None, None), init="normal", scale=0.02)
+    pb.declare(f"{prefix}/wi", lead + (e, d, eff), lax + ("expert", "fsdp", "mlp"))
+    pb.declare(f"{prefix}/wg", lead + (e, d, eff), lax + ("expert", "fsdp", "mlp"))
+    pb.declare(f"{prefix}/wo", lead + (e, eff, d), lax + ("expert", "mlp", "fsdp"))
+    if cfg.n_shared_experts:
+        declare_mlp(pb, f"{prefix}/shared", d, cfg.n_shared_experts * eff, "swiglu", stack)
+
+
+def _positions(e_ids: jax.Array, n_experts: int, capacity: int):
+    """Per-row buffer slots.  e_ids: (M,) int32 -> (pos, keep).
+
+    Stable sort by expert; rank within expert = index - segment start; tokens
+    with rank >= capacity are dropped (pos pinned to the overflow slot C)."""
+    m = e_ids.shape[0]
+    order = jnp.argsort(e_ids, stable=True)
+    sorted_e = e_ids[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts), side="left")
+    rank_sorted = jnp.arange(m) - seg_start[sorted_e]
+    rank = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < capacity
+    pos = jnp.where(keep, rank, capacity)
+    return pos, keep
+
+
+def _route(params, x, cfg, n_domains: int):
+    """Router logits -> (weights (B,S,k), experts (B,S,k), aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"].astype(jnp.float32))
+    if cfg.cna_routing and n_domains > 1:
+        # CNA main-queue bias: prefer experts homed on the token's domain.
+        # Domains follow the contiguous GSPMD layout of the batch dim.
+        tok_dom = (jnp.arange(b, dtype=jnp.int32) * n_domains) // b          # (B,)
+        exp_dom = (jnp.arange(e, dtype=jnp.int32) * n_domains) // e          # (E,)
+        local = (tok_dom[:, None] == exp_dom[None, :]).astype(jnp.float32)   # (B,E)
+        logits = logits + cfg.cna_routing_bias * local[:, None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # load-balancing loss (Switch-style): E * sum_e f_e * P_e
+    f = jnp.mean(jnp.sum(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=2), axis=(0, 1))
+    p = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(f * p) * cfg.router_aux_coef
+    return w.astype(x.dtype), idx.astype(jnp.int32), aux
+
+
+def moe_apply(params: dict, x: jax.Array, cfg, *, n_domains: int = 1):
+    """x: (B, S, D) -> (out, aux_loss)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = moe_capacity(s, k, e, cfg.capacity_factor)
+    w, idx, aux = _route(params, x, cfg, n_domains)
+
+    tok = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[:, None], (s, k)).reshape(-1)  # (M,)
+
+    def dispatch_row(x_row, e_row, w_row):
+        """x_row: (S, D); e_row/w_row: (S, k) -> (out_row (S, D))."""
+        e_all = e_row.reshape(-1)                  # (M,) M = S*k
+        w_all = w_row.reshape(-1)
+        pos, keep = _positions(e_all, e, cap)
+        x_tok = x_row[tok]                          # (M, D)
+        buf = jnp.zeros((e, cap + 1, d), x_row.dtype)
+        buf = buf.at[e_all, pos].add(jnp.where(keep[:, None], x_tok, 0))
+        return buf[:, :cap], (e_all, pos, keep, w_all)
+
+    buf, (e_all, pos, keep, w_all) = jax.vmap(dispatch_row)(x, idx, w)
+    buf = shard(buf, "batch", "expert", None, None)  # (B, E, C, D)
+
+    h = jnp.einsum("becd,edf->becf", buf, params["wi"])
+    g = jnp.einsum("becd,edf->becf", buf, params["wg"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype) * h
+    h = shard(h, "batch", "expert", None, "mlp")
+    out_buf = jnp.einsum("becf,efd->becd", h, params["wo"])
+    out_buf = shard(out_buf, "batch", "expert", None, None)
+
+    def combine_row(ob, e_all, pos, keep, w_all):
+        y = ob[e_all, jnp.minimum(pos, cap - 1)]                      # (M, D)
+        y = jnp.where(keep[:, None], y, 0) * w_all[:, None].astype(ob.dtype)
+        return jnp.zeros((s, d), ob.dtype).at[tok].add(y)
+
+    out = jax.vmap(combine_row)(out_buf, e_all, pos, keep, w_all)
+
+    if cfg.n_shared_experts:
+        out = out + mlp_apply(params["shared"], x, "swiglu")
+    return shard(out, "batch", "seq", "embed"), aux

@@ -1,0 +1,77 @@
+"""Model factory + per-(arch, shape) abstract input specs for the dry-run.
+
+``input_specs`` returns (abstract_inputs, logical_axes) pytrees of
+``jax.ShapeDtypeStruct`` — the ShapeDtypeStruct stand-in pattern: weak-type
+correct, shardable, zero device allocation.  ``decode`` shapes include the
+full KV/recurrent cache as an input (one new token against a seq_len cache,
+per the assignment).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)
+
+
+def _tok(b, s):
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, model=None):
+    """-> (abstract inputs pytree, logical-axes pytree) for the given step.
+
+    train:   {tokens, labels [, patches | frames]}
+    prefill: {tokens [, patches | frames]}
+    decode:  {cache, tokens (B, 1)}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    model = model or build_model(cfg)
+
+    extra, extra_log = {}, {}
+    if cfg.family == "encdec":
+        extra["frames"] = jax.ShapeDtypeStruct((b, cfg.enc_seq, cfg.d_model), dt)
+        extra_log["frames"] = ("batch", None, None)
+    if cfg.n_patches:
+        extra["patches"] = jax.ShapeDtypeStruct((b, cfg.n_patches, cfg.d_model), dt)
+        extra_log["patches"] = ("batch", None, None)
+
+    if shape.kind == "train":
+        specs = {"tokens": _tok(b, s), "labels": _tok(b, s), **extra}
+        logical = {"tokens": ("batch", None), "labels": ("batch", None), **extra_log}
+        return specs, logical
+    if shape.kind == "prefill":
+        specs = {"tokens": _tok(b, s), **extra}
+        logical = {"tokens": ("batch", None), **extra_log}
+        return specs, logical
+    if shape.kind == "decode":
+        cache = model.cache_abstract(b, s)
+        specs = {"cache": cache, "tokens": _tok(b, 1)}
+        logical = {"cache": model.cache_logical(cache), "tokens": ("batch", None)}
+        return specs, logical
+    raise ValueError(shape.kind)
+
+
+def synthetic_batch(cfg: ModelConfig, shape_kind: str, batch: int, seq: int, seed: int = 0):
+    """Concrete random inputs matching input_specs (for smoke tests/examples)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    out = {"tokens": jax.random.randint(k1, (batch, seq), 0, cfg.vocab, jnp.int32)}
+    if shape_kind == "train":
+        out["labels"] = jax.random.randint(k2, (batch, seq), 0, cfg.vocab, jnp.int32)
+    if cfg.family == "encdec":
+        out["frames"] = jax.random.normal(k3, (batch, cfg.enc_seq, cfg.d_model), dt)
+    if cfg.n_patches:
+        out["patches"] = jax.random.normal(k3, (batch, cfg.n_patches, cfg.d_model), dt)
+    return out

@@ -1,0 +1,139 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block: x -> [branch1: linear -> GeLU] * [branch2: linear -> causal depthwise
+conv1d -> RG-LRU] -> out linear.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a xc_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x xc_t + b_x)          input gate
+    log a_t = c * r_t * log_sigmoid(Lambda)            (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * xc_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over the sequence (O(S log S)
+work, O(log S) depth — the TPU-friendly formulation); decode is the one-step
+update.  A Pallas chunked-scan kernel (repro/kernels/rglru_scan) implements the
+same recurrence with VMEM-resident state for the hot path.
+
+Gate matrices are full (W x W) rather than Griffin's block-diagonal — noted in
+DESIGN.md (slightly more params, same recurrence dynamics).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import ParamBuilder
+from .sharding import shard
+
+RGLRU_C = 8.0
+
+
+def declare_rglru(pb: ParamBuilder, prefix: str, d_model: int, width: int, conv_width: int, stack: int = 0):
+    lead = (stack,) if stack else ()
+    lax = ("layers",) if stack else ()
+    pb.declare(f"{prefix}/wy", lead + (d_model, width), lax + ("fsdp", "mlp"))
+    pb.declare(f"{prefix}/wx", lead + (d_model, width), lax + ("fsdp", "mlp"))
+    pb.declare(f"{prefix}/conv_w", lead + (conv_width, width), lax + (None, "mlp"))
+    pb.declare(f"{prefix}/conv_b", lead + (width,), lax + ("mlp",), init="zeros")
+    pb.declare(f"{prefix}/wa", lead + (width, width), lax + ("fsdp", "mlp"), init="normal")
+    pb.declare(f"{prefix}/ba", lead + (width,), lax + ("mlp",), init="zeros")
+    pb.declare(f"{prefix}/wi", lead + (width, width), lax + ("fsdp", "mlp"), init="normal")
+    pb.declare(f"{prefix}/bi", lead + (width,), lax + ("mlp",), init="zeros")
+    pb.declare(f"{prefix}/lam", lead + (width,), lax + ("mlp",), init="rglru_a")
+    pb.declare(f"{prefix}/wo", lead + (width, d_model), lax + ("mlp", "fsdp"))
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv.  x: (B, S, W); w: (K, W); b: (W,)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):  # K is tiny (4); unrolled adds beat a conv op here
+        out = out + xp[:, i : i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def conv1d_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array, b: jax.Array):
+    """One decode step.  x_t: (B, W); conv_state: (B, K-1, W) past inputs."""
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B, K, W)
+    out = jnp.einsum("bkw,kw->bw", window, w) + b
+    return out, window[:, 1:, :]
+
+
+def _gates(params, xc):
+    r = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", xc.astype(jnp.float32), params["wa"].astype(jnp.float32))
+        + params["ba"].astype(jnp.float32)
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("...w,wv->...v", xc.astype(jnp.float32), params["wi"].astype(jnp.float32))
+        + params["bi"].astype(jnp.float32)
+    )
+    log_a = RGLRU_C * r * jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xc.astype(jnp.float32))
+    return a, gated_in
+
+
+def rglru_scan(params: dict, xc: jax.Array, h0: jax.Array | None = None, *, impl: str = "assoc"):
+    """xc: (B, S, W) conv output -> (y (B, S, W), h_last (B, W))."""
+    a, gi = _gates(params, xc)
+    if impl == "pallas":
+        from repro.kernels.rglru_scan import ops as rg_ops
+
+        h0_ = jnp.zeros(a[:, 0].shape, jnp.float32) if h0 is None else h0.astype(jnp.float32)
+        y = rg_ops.linear_scan(a, gi, h0_)
+        return y.astype(xc.dtype), y[:, -1].astype(jnp.float32)
+    if h0 is not None:
+        gi = gi.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a2 * a1, a2 * b1 + b2
+
+    # rglru Pallas kernel region: the scan's intermediate tree levels stay in
+    # VMEM on TPU (the kernel streams (a, gi) once and writes h once)
+    with jax.named_scope("rglru_kernel_region"):
+        _, h = jax.lax.associative_scan(combine, (a, gi), axis=1)
+    return h.astype(xc.dtype), h[:, -1]
+
+
+def rglru_step(params: dict, xc_t: jax.Array, h_prev: jax.Array):
+    """One decode step.  xc_t: (B, W); h_prev: (B, W) fp32."""
+    a, gi = _gates(params, xc_t)
+    h = a * h_prev.astype(jnp.float32) + gi
+    return h.astype(xc_t.dtype), h
+
+
+def rglru_block(params: dict, x: jax.Array, *, scan_impl: str = "assoc"):
+    """Full Griffin recurrent block, training/prefill mode.
+
+    x: (B, S, D) -> (y: (B, S, D), state (h_last, conv_tail))."""
+    y_branch = jnp.einsum("bsd,dw->bsw", x, params["wy"])
+    y_branch = jax.nn.gelu(y_branch.astype(jnp.float32), approximate=True).astype(x.dtype)
+    xb = jnp.einsum("bsd,dw->bsw", x, params["wx"])
+    xb = shard(xb, "batch", None, "mlp")
+    xc = causal_conv1d(xb, params["conv_w"], params["conv_b"])
+    h, h_last = rglru_scan(params, xc, impl=scan_impl)
+    out = jnp.einsum("bsw,wd->bsd", h * y_branch, params["wo"])
+    k = params["conv_w"].shape[0]
+    conv_tail = xb[:, -(k - 1) :, :] if xb.shape[1] >= k - 1 else jnp.pad(
+        xb, ((0, 0), (k - 1 - xb.shape[1], 0), (0, 0))
+    )
+    return shard(out, "batch", "seq", "embed"), (h_last.astype(jnp.float32), conv_tail)
+
+
+def rglru_block_step(params: dict, x_t: jax.Array, state):
+    """Decode step.  x_t: (B, 1, D); state = (h (B,W) fp32, conv (B,K-1,W))."""
+    h_prev, conv_state = state
+    xt = x_t[:, 0, :]
+    y_branch = jax.nn.gelu(
+        (xt @ params["wy"]).astype(jnp.float32), approximate=True
+    ).astype(x_t.dtype)
+    xb = xt @ params["wx"]
+    xc, conv_state = conv1d_step(xb, conv_state.astype(xb.dtype), params["conv_w"], params["conv_b"])
+    h, h_new = rglru_step(params, xc, h_prev)
+    out = (h * y_branch) @ params["wo"]
+    return out[:, None, :], (h_new, conv_state)

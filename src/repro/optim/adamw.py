@@ -1,0 +1,70 @@
+"""Sharded AdamW.
+
+Moments are plain pytrees mirroring the parameter tree, so they inherit the
+parameters' GSPMD sharding (fsdp x model) — ZeRO-style optimizer-state
+sharding falls out of the logical-axis rules with no extra machinery.
+``dtype`` selects the moment precision: fp32 default, bf16 for 340B-class
+models where fp32 moments alone would exceed HBM (nemotron-4-340b config).
+
+Update math runs in fp32 regardless of storage dtype (cast up, update, cast
+down) — bf16 moments lose ~3 bits of mantissa on the EMA, an accepted
+trade-off recorded in DESIGN.md.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params, dtype=jnp.float32):
+    zeros = lambda p: jnp.zeros(p.shape, dtype)
+    return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw_update(
+    params,
+    grads,
+    opt_state,
+    step: jax.Array,
+    *,
+    lr: jax.Array | float,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    """Returns (new_params, new_opt_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.where(gnorm > clip_norm, clip_norm / jnp.maximum(gnorm, 1e-12), 1.0)
+
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1.0 - jnp.power(b1, t)
+    bc2 = 1.0 - jnp.power(b2, t)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + g * (1.0 - b1)
+        v32 = v.astype(jnp.float32) * b2 + jnp.square(g) * (1.0 - b2)
+        mh = m32 / bc1
+        vh = v32 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(opt_state["m"])
+    flat_v = tdef.flatten_up_to(opt_state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "clip_scale": scale}
+    return new_p, {"m": new_m, "v": new_v}, metrics

@@ -1,0 +1,18 @@
+"""LR schedules (pure functions of the step, jit-safe)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(step, *, peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    s = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * s / jnp.maximum(1.0, warmup)
+    frac = jnp.clip((s - warmup) / jnp.maximum(1.0, total - warmup), 0.0, 1.0)
+    cos = peak_lr * (floor + (1.0 - floor) * 0.5 * (1.0 + jnp.cos(jnp.pi * frac)))
+    return jnp.where(s < warmup, warm, cos)
+
+
+def constant(step, *, lr: float):
+    del step
+    return jnp.asarray(lr, jnp.float32)

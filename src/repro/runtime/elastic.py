@@ -1,0 +1,67 @@
+"""Elastic re-meshing: survive pod/host loss by re-sharding from checkpoint.
+
+``plan_mesh`` picks the largest usable mesh for the devices that remain
+(drop the pod axis when a pod dies; shrink the data axis for partial loss —
+the model axis is preserved because TP degree is baked into layouts/Pallas
+block shapes, while the batch axes are free).
+
+``ElasticTrainer`` is the restart loop used by launch/train.py and the fault
+tests: run -> (failure) -> plan_mesh over survivors -> restore checkpoint
+with the *new* shardings (CheckpointManager stores unsharded arrays, so this
+is one device_put per leaf) -> rescale the data loader (same global stream,
+new host partition) -> continue.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+
+from repro.models.sharding import use_mesh
+from repro.training.step import state_abstract, state_logical, tree_shardings
+
+
+def plan_mesh(n_devices: int, *, model_parallel: int, want_pods: int = 1):
+    """-> (shape tuple, axis names) for the largest mesh on n_devices.
+
+    Keeps ``model_parallel`` fixed; gives the rest to data; re-adds the pod
+    axis only if at least 2 full pods survive."""
+    if n_devices % model_parallel:
+        raise ValueError(f"{n_devices} devices not divisible by TP={model_parallel}")
+    rest = n_devices // model_parallel
+    if want_pods >= 2 and rest % want_pods == 0 and rest // want_pods >= 1:
+        return (want_pods, rest // want_pods, model_parallel), ("pod", "data", "model")
+    return (rest, model_parallel), ("data", "model")
+
+
+def make_mesh_from_plan(shape: Sequence[int], axes: Sequence[str], devices=None):
+    devices = devices if devices is not None else jax.devices()
+    n = 1
+    for s in shape:
+        n *= s
+    return jax.make_mesh(tuple(shape), tuple(axes), devices=devices[:n])
+
+
+@dataclass
+class ElasticTrainer:
+    """Restart loop driver (see tests/test_elastic.py for the 8->4 scenario)."""
+
+    model: object
+    cfg: object
+    ckpt: object          # CheckpointManager
+    model_parallel: int
+
+    def restore_on(self, devices, *, want_pods: int = 1):
+        """Restore the latest checkpoint onto a mesh built from ``devices``."""
+        shape, axes = plan_mesh(len(devices), model_parallel=self.model_parallel, want_pods=want_pods)
+        mesh = make_mesh_from_plan(shape, axes, devices)
+        step = self.ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError("no checkpoint to restore")
+        abs_state = state_abstract(self.model, self.cfg)
+        with use_mesh(mesh):
+            shardings = tree_shardings(abs_state, state_logical(self.model))
+            state, extra = self.ckpt.restore(step, abs_state, shardings=shardings, extra=True)
+        return mesh, state, extra

@@ -1,0 +1,91 @@
+"""Fault detection: heartbeats, straggler detection, failure injection.
+
+At real pod scale these hooks sit in the per-host launcher agent; the control
+plane is identical on the CPU container (time is injectable so tests are
+deterministic).  Policies implemented:
+
+  * **HeartbeatMonitor** — declares a worker dead after ``timeout`` without a
+    beat; the training loop turns that into a checkpoint-restore + re-mesh
+    (see ``ElasticTrainer``).
+  * **StragglerDetector** — EWMA of per-worker step durations; a worker
+    slower than ``factor`` x the fleet median is flagged.  Mitigation is the
+    CNA move: a flagged worker's *data shard* is re-assigned to its pod peers
+    (work moves within the locality domain; the straggler rejoins when its
+    EWMA recovers — the secondary-queue readmission).
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from dataclasses import dataclass, field
+
+
+class WorkerFailure(RuntimeError):
+    def __init__(self, worker: int, reason: str):
+        super().__init__(f"worker {worker}: {reason}")
+        self.worker = worker
+        self.reason = reason
+
+
+@dataclass
+class HeartbeatMonitor:
+    n_workers: int
+    timeout: float = 30.0
+    clock: callable = time.monotonic
+    last: dict = field(default_factory=dict)
+
+    def __post_init__(self):
+        now = self.clock()
+        self.last = {w: now for w in range(self.n_workers)}
+
+    def beat(self, worker: int):
+        self.last[worker] = self.clock()
+
+    def dead_workers(self) -> list[int]:
+        now = self.clock()
+        return [w for w, t in self.last.items() if now - t > self.timeout]
+
+    def check(self):
+        dead = self.dead_workers()
+        if dead:
+            raise WorkerFailure(dead[0], f"no heartbeat for {self.timeout}s")
+
+
+@dataclass
+class StragglerDetector:
+    n_workers: int
+    factor: float = 2.0
+    alpha: float = 0.3          # EWMA smoothing
+    min_samples: int = 3
+    ewma: dict = field(default_factory=dict)
+    count: dict = field(default_factory=dict)
+
+    def record(self, worker: int, duration: float):
+        prev = self.ewma.get(worker)
+        self.ewma[worker] = duration if prev is None else (1 - self.alpha) * prev + self.alpha * duration
+        self.count[worker] = self.count.get(worker, 0) + 1
+
+    def stragglers(self) -> list[int]:
+        ready = [w for w in self.ewma if self.count[w] >= self.min_samples]
+        if len(ready) < 2:
+            return []
+        med = statistics.median(self.ewma[w] for w in ready)
+        return [w for w in ready if self.ewma[w] > self.factor * med]
+
+    def reassignment(self, n_hosts: int) -> dict[int, list[int]]:
+        """Data-shard plan: straggler rows handed to same-pod peers first.
+
+        Returns {host: [extra shard ids]} — the CNA locality rule: prefer a
+        donor inside the straggler's pod (same 'socket'), fall back to any
+        host (the fairness flush) if the whole pod is flagged."""
+        lag = set(self.stragglers())
+        healthy = [h for h in range(n_hosts) if h not in lag]
+        if not healthy or not lag:
+            return {}
+        plan: dict[int, list[int]] = {h: [] for h in healthy}
+        for s in sorted(lag):
+            pod_peers = [h for h in healthy if h // max(1, n_hosts // 2) == s // max(1, n_hosts // 2)]
+            donor = min(pod_peers or healthy, key=lambda h: len(plan[h]))
+            plan[donor].append(s)
+        return {h: v for h, v in plan.items() if v}

@@ -1,0 +1,2 @@
+from .engine import DecodeEngine, Request  # noqa: F401
+from .scheduler import CNAScheduler, FIFOScheduler, SchedulerMetrics  # noqa: F401

@@ -1,0 +1,84 @@
+"""Batched KV/recurrent cache slots for continuous batching.
+
+The engine owns one cache pytree with a slot (decode-batch) axis.  Each slot
+is independently claimable; inserting a prefilled (B=1) cache into slot ``i``
+is a per-leaf ``dynamic_update_slice`` on that leaf's batch axis.  The batch
+axis per leaf comes from the model's ``cache_logical`` tree (the position of
+the "batch" logical axis), so attention KV (B,S,kv,hd), stacked KV
+(L,B,S,kv,hd), RG-LRU state (B,W), SSD state (B,H,P,N) and encdec cross-KV
+are all handled uniformly.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotCache:
+    """cache pytree + slot bookkeeping."""
+
+    def __init__(self, cache, axes, n_slots: int):
+        self.cache = cache
+        self.axes = axes  # per-leaf batch-axis index (or None for pos)
+        self.n_slots = n_slots
+        self.free = list(range(n_slots))
+        self.owner: dict[int, object] = {}
+
+    @classmethod
+    def zeros(cls, model, n_slots: int, cache_len: int):
+        abs_cache = model.cache_abstract(n_slots, cache_len)
+        logical = model.cache_logical(abs_cache)
+        axes = jax.tree.map(
+            lambda l: l.index("batch") if "batch" in l else None,
+            logical,
+            is_leaf=lambda x: isinstance(x, tuple) and all(isinstance(i, (str, type(None))) for i in x),
+        )
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
+        cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
+        axes["pos"] = None
+        return cls(cache, axes, n_slots)
+
+    def claim(self, owner) -> int:
+        slot = self.free.pop(0)
+        self.owner[slot] = owner
+        return slot
+
+    def release(self, slot: int):
+        self.owner.pop(slot, None)
+        self.free.append(slot)
+        self.free.sort()
+
+    @property
+    def active(self) -> list[int]:
+        return sorted(self.owner)
+
+    def insert(self, slot: int, single_cache):
+        """Insert a (batch=1) prefill cache into ``slot``."""
+
+        def put(dst, src, ax):
+            if ax is None:
+                return dst
+            idx = [0] * dst.ndim
+            idx[ax] = slot
+            src = jnp.asarray(src)
+            src = _fit(src, dst, ax)
+            return jax.lax.dynamic_update_slice(dst, src.astype(dst.dtype), tuple(idx))
+
+        new = {}
+        for key in self.cache:
+            if key == "pos":
+                continue
+            new[key] = jax.tree.map(put, self.cache[key], single_cache[key], self.axes[key])
+        new["pos"] = self.cache["pos"].at[slot].set(jnp.asarray(single_cache["pos"], jnp.int32))
+        self.cache = new
+
+
+def _fit(src, dst, batch_ax: int):
+    """Pad/trim src so every axis matches dst (batch axis forced to 1)."""
+    target = tuple(1 if i == batch_ax else s for i, s in enumerate(dst.shape))
+    if src.shape == target:
+        return src
+    pads = [(0, max(0, t - s)) for s, t in zip(src.shape, target)]
+    src = jnp.pad(src, pads)
+    return src[tuple(slice(0, t) for t in target)]

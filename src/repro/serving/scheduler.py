@@ -1,0 +1,101 @@
+"""CNA continuous-batching admission scheduler.
+
+This is the paper's algorithm carried verbatim into the serving runtime via
+``repro.core.policy.CNAAdmissionQueue``:
+
+  paper                      | serving
+  ---------------------------+------------------------------------------
+  lock                       | a free decode slot (the serialised resource)
+  thread                     | a queued request
+  NUMA socket of a thread    | the locality domain of the request — the pod
+                             | holding its prefix/KV-cache home
+  socket of the lock holder  | the engine's *current* domain (domain of the
+                             | most recently admitted request)
+  main queue                 | CNA main queue (arrivals always join it)
+  secondary queue            | CNA secondary queue (remote-domain requests
+                             | parked by find_successor)
+  keep_lock_local threshold  | fairness_threshold (starvation bound)
+  remote cache miss          | domain switch => KV/prefix migration cost
+
+State is compact by construction (two deques + a counter), the paper's
+argument against per-domain ("cohort") scheduler structures.
+
+``SchedulerMetrics`` counts domain switches and per-domain service so
+benchmarks can reproduce the paper's throughput/fairness trade-off curves in
+the serving setting (benchmarks/serving_bench.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.policy import CNAAdmissionQueue, FIFOAdmissionQueue
+
+
+@dataclass
+class SchedulerMetrics:
+    admitted: int = 0
+    local_admits: int = 0
+    domain_switches: int = 0
+    per_domain: dict = field(default_factory=dict)
+    waits: list = field(default_factory=list)
+
+    @property
+    def locality(self) -> float:
+        return self.local_admits / max(1, self.admitted)
+
+    def fairness_factor(self) -> float:
+        """Paper Section 7.1.1, over domains instead of threads."""
+        counts = sorted(self.per_domain.values(), reverse=True)
+        tot = sum(counts)
+        if not counts or tot == 0:
+            return 1.0
+        half = max(1, len(counts) // 2)
+        return sum(counts[:half]) / tot
+
+
+class _BaseScheduler:
+    def __init__(self, queue):
+        self._q = queue
+        self.current_domain = 0
+        self.metrics = SchedulerMetrics()
+        self._clock = 0
+
+    def submit(self, request, domain: int):
+        self._q.push((request, self._clock), domain)
+
+    def __len__(self):
+        return len(self._q)
+
+    def next_request(self):
+        """Admit the next request into a free slot (or None)."""
+        out = self._q.pop(self.current_domain)
+        if out is None:
+            return None
+        (request, t_submit), domain = out
+        self.metrics.admitted += 1
+        self.metrics.waits.append(self._clock - t_submit)
+        self.metrics.per_domain[domain] = self.metrics.per_domain.get(domain, 0) + 1
+        if domain == self.current_domain:
+            self.metrics.local_admits += 1
+        else:
+            self.metrics.domain_switches += 1
+            self.current_domain = domain
+        return request
+
+    def tick(self):
+        self._clock += 1
+
+
+class CNAScheduler(_BaseScheduler):
+    def __init__(self, *, fairness_threshold: int = 0xFFFF, shuffle_reduction: bool = False, seed: int = 0xC0A):
+        super().__init__(
+            CNAAdmissionQueue(threshold=fairness_threshold, shuffle_reduction=shuffle_reduction, seed=seed)
+        )
+
+
+class FIFOScheduler(_BaseScheduler):
+    """MCS-admission baseline: strict arrival order, domain-oblivious."""
+
+    def __init__(self, **_):
+        super().__init__(FIFOAdmissionQueue())

@@ -1,0 +1,1 @@
+from .step import TrainState, make_train_step, state_abstract, state_logical  # noqa: F401

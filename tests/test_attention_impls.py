@@ -1,0 +1,123 @@
+"""All attention implementations agree; decode path matches full recompute."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (
+    attn_chunked,
+    attn_decode,
+    attn_triangular,
+    attn_xla,
+)
+
+
+def _qkv(key, b, sq, skv, h, hkv, hd, dt=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return (
+        jax.random.normal(ks[0], (b, sq, h, hd), dt),
+        jax.random.normal(ks[1], (b, skv, hkv, hd), dt),
+        jax.random.normal(ks[2], (b, skv, hkv, hd), dt),
+    )
+
+
+@pytest.mark.parametrize("window", [0, 32])
+@pytest.mark.parametrize("chunk", [16, 64, 128])
+def test_chunked_matches_xla(window, chunk):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, 128, 128, 4, 2, 32)
+    want = attn_xla(q, k, v, causal=True, window=window)
+    got = attn_chunked(q, k, v, causal=True, window=window, chunk=chunk)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("chunk", [32, 64])
+def test_triangular_matches_xla(window, chunk):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 2, 128, 128, 4, 4, 32)
+    want = attn_xla(q, k, v, causal=True, window=window)
+    got = attn_triangular(q, k, v, causal=True, window=window, chunk=chunk)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+def test_chunked_cross_attention_unpadded_kv():
+    """Non-causal, S_kv not a multiple of chunk (whisper cross-attn path)."""
+    q, k, v = _qkv(jax.random.PRNGKey(2), 2, 64, 100, 4, 4, 32)
+    want = attn_xla(q, k, v, causal=False, window=0)
+    got = attn_chunked(q, k, v, causal=False, window=0, chunk=32)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+@given(
+    sq=st.integers(1, 40),
+    h=st.sampled_from([1, 2, 4]),
+    hkv=st.sampled_from([1, 2]),
+    window=st.sampled_from([0, 8]),
+    seed=st.integers(0, 1000),
+)
+@settings(max_examples=20, deadline=None)
+def test_chunked_equals_xla_property(sq, h, hkv, window, seed):
+    if h % hkv:
+        hkv = 1
+    q, k, v = _qkv(jax.random.PRNGKey(seed), 1, sq, sq, h, hkv, 16)
+    want = attn_xla(q, k, v, causal=True, window=window)
+    got = attn_chunked(q, k, v, causal=True, window=window, chunk=8)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+def test_decode_matches_full_last_row():
+    """attn_decode on a cache of n valid entries == row n-1 of full attention."""
+    b, s, h, hkv, hd = 2, 32, 4, 2, 16
+    q, k, v = _qkv(jax.random.PRNGKey(3), b, s, s, h, hkv, hd)
+    full = attn_xla(q, k, v, causal=True)
+    for n in (1, 7, 32):
+        out = attn_decode(q[:, n - 1 : n], k, v, jnp.asarray(n))
+        np.testing.assert_allclose(out[:, 0], full[:, n - 1], atol=2e-5, rtol=2e-5)
+
+
+def test_decode_window_matches_full():
+    b, s, h, hkv, hd, w = 1, 64, 2, 1, 16, 16
+    q, k, v = _qkv(jax.random.PRNGKey(4), b, s, s, h, hkv, hd)
+    full = attn_xla(q, k, v, causal=True, window=w)
+    n = 50
+    out = attn_decode(q[:, n - 1 : n], k, v, jnp.asarray(n), window=w)
+    np.testing.assert_allclose(out[:, 0], full[:, n - 1], atol=2e-5, rtol=2e-5)
+
+
+def test_decode_ring_buffer_equivalence():
+    """A ring cache of size w holding the last w tokens == windowed decode."""
+    b, s, h, hkv, hd, w = 1, 48, 2, 2, 16, 16
+    q, k, v = _qkv(jax.random.PRNGKey(5), b, s, s, h, hkv, hd)
+    n = 40  # current length; ring holds tokens n-w..n-1 in rotated order
+    ring_idx = [(i % w) for i in range(n - w, n)]
+    k_ring = jnp.zeros((b, w, hkv, hd), k.dtype)
+    v_ring = jnp.zeros((b, w, hkv, hd), v.dtype)
+    for pos, slot in zip(range(n - w, n), ring_idx):
+        k_ring = k_ring.at[:, slot].set(k[:, pos])
+        v_ring = v_ring.at[:, slot].set(v[:, pos])
+    got = attn_decode(q[:, n - 1 : n], k_ring, v_ring, jnp.asarray(n), window=w, ring=True)
+    want = attn_xla(q, k, v, causal=True, window=w)[:, n - 1]
+    np.testing.assert_allclose(got[:, 0], want, atol=2e-5, rtol=2e-5)
+
+
+def test_per_row_positions_decode():
+    """attn_decode with per-row cur_len matches per-row scalar calls."""
+    b, s, h, hkv, hd = 3, 24, 2, 1, 16
+    q, k, v = _qkv(jax.random.PRNGKey(6), b, s, s, h, hkv, hd)
+    lens = jnp.asarray([5, 13, 24])
+    got = attn_decode(q[:, :1], k, v, lens)
+    for i, n in enumerate([5, 13, 24]):
+        want = attn_decode(q[i : i + 1, :1], k[i : i + 1], v[i : i + 1], jnp.asarray(n))
+        np.testing.assert_allclose(got[i : i + 1], want, atol=2e-5, rtol=2e-5)
+
+
+def test_gradients_flow_and_match():
+    """d(loss)/dq identical between xla and chunked implementations."""
+    q, k, v = _qkv(jax.random.PRNGKey(7), 1, 64, 64, 2, 2, 16)
+
+    g1 = jax.grad(lambda q: attn_xla(q, k, v, causal=True).sum())(q)
+    g2 = jax.grad(lambda q: attn_chunked(q, k, v, causal=True, chunk=16).sum())(q)
+    g3 = jax.grad(lambda q: attn_triangular(q, k, v, causal=True, chunk=16).sum())(q)
+    np.testing.assert_allclose(g1, g2, atol=3e-5, rtol=3e-5)
+    np.testing.assert_allclose(g1, g3, atol=3e-5, rtol=3e-5)

@@ -1,0 +1,94 @@
+"""Property tests for the CNA admission policy (the reusable abstraction)."""
+
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policy import CNAAdmissionQueue, FIFOAdmissionQueue
+
+
+@given(
+    items=st.lists(st.tuples(st.integers(0, 10_000), st.integers(0, 3)), max_size=200),
+    threshold=st.sampled_from([0, 1, 0xF, 0xFFFF]),
+    shuffle=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=150, deadline=None)
+def test_conservation_no_item_lost_or_duplicated(items, threshold, shuffle, seed):
+    """Every pushed item is popped exactly once, regardless of discipline
+    parameters — the queue-splicing must never drop or duplicate work."""
+    q = CNAAdmissionQueue(threshold=threshold, shuffle_reduction=shuffle, seed=seed)
+    for v, d in items:
+        q.push(v, d)
+    popped = []
+    dom = 0
+    while len(q):
+        v, d = q.pop(dom)
+        popped.append(v)
+        dom = d  # the served item's domain becomes the holder's domain
+    assert sorted(popped) == sorted(v for v, _ in items)
+
+
+@given(
+    n=st.integers(1, 100),
+    domains=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=100, deadline=None)
+def test_local_items_served_before_remote_when_threshold_high(n, domains, seed):
+    """With an effectively-infinite threshold and all items present, every
+    domain-0 item is served before any remote item when the holder is 0
+    (pure locality mode)."""
+    q = CNAAdmissionQueue(threshold=(1 << 29) - 1, shuffle_reduction=False, seed=seed)
+    rng = random.Random(seed)
+    vals = [(i, rng.randrange(domains)) for i in range(n)]
+    for v, d in vals:
+        q.push(v, d)
+    served = []
+    while len(q):
+        served.append(q.pop(0))
+    local = [v for v, d in vals if d == 0]
+    assert [v for v, d in served[: len(local)]] == local
+
+
+def test_starvation_bound_via_threshold():
+    """With threshold=0 (keep_lock_local always false), the discipline
+    degenerates to FIFO-with-flushes: remote items are never deferred more
+    than one flush."""
+    q = CNAAdmissionQueue(threshold=0, shuffle_reduction=False)
+    for i in range(10):
+        q.push(i, i % 2)
+    served = [q.pop(0)[0] for _ in range(10)]
+    assert served == list(range(10))
+
+
+def test_locality_stat_beats_fifo_on_alternating_stream():
+    rng = random.Random(0)
+    stream = [(i, rng.randrange(2)) for i in range(4000)]
+    cna = CNAAdmissionQueue(threshold=0xFF, seed=1)
+    fifo = FIFOAdmissionQueue()
+    for impl in (cna, fifo):
+        dom = 0
+        i = 0
+        # steady state: keep ~32 items queued, pop one at a time
+        for v, d in stream:
+            impl.push(v, d)
+            i += 1
+            if i >= 32:
+                out = impl.pop(dom)
+                dom = out[1]
+        while len(impl):
+            out = impl.pop(dom)
+            dom = out[1]
+    assert cna.stats.locality > 0.9
+    assert fifo.stats.locality < 0.6
+
+
+def test_drain_returns_everything():
+    q = CNAAdmissionQueue(threshold=(1 << 29) - 1, seed=3)
+    for i in range(20):
+        q.push(i, i % 3)
+    q.pop(0)
+    rest = q.drain()
+    assert len(rest) == 19
+    assert len(q) == 0
