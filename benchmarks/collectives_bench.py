@@ -22,7 +22,7 @@ from repro.core.collectives import (
     wire_bytes_reducescatter,
 )
 
-from .common import claim, table
+from .common import REPO_ROOT, claim, subproc_env, table
 
 
 def wire_accounting(grad_bytes=2 * 8_000_000_000, intra=16, pods=2):
@@ -60,6 +60,7 @@ _MESH_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core.collectives import cna_grad_sync, hierarchical_grad_sync
+    from repro.core.jax_compat import shard_map
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
     x = jax.random.normal(jax.random.PRNGKey(0), (16, 8), jnp.float32)
@@ -69,9 +70,9 @@ _MESH_SCRIPT = textwrap.dedent("""
 
     spec = P(None, None)
     args = dict(mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False)
-    flat_fn = jax.jit(jax.shard_map(flat, **args))
-    hier_fn = jax.jit(jax.shard_map(lambda g: hierarchical_grad_sync(g), **args))
-    comp_fn = jax.jit(jax.shard_map(lambda g: cna_grad_sync(g, compress=True), **args))
+    flat_fn = jax.jit(shard_map(flat, **args))
+    hier_fn = jax.jit(shard_map(lambda g: hierarchical_grad_sync(g), **args))
+    comp_fn = jax.jit(shard_map(lambda g: cna_grad_sync(g, compress=True), **args))
 
     want = np.asarray(flat_fn(x))
     got_h = np.asarray(hier_fn(x))
@@ -86,7 +87,7 @@ _MESH_SCRIPT = textwrap.dedent("""
 def mesh_numerics():
     proc = subprocess.run(
         [sys.executable, "-c", _MESH_SCRIPT], capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}, cwd="/root/repo",
+        env=subproc_env(), cwd=REPO_ROOT,
     )
     ok = proc.returncode == 0 and "MESH_OK" in proc.stdout
     claim("collectives: hierarchical == flat psum; compressed within 2% (8-dev mesh)",

@@ -32,3 +32,19 @@ THREADS_2S = [1, 2, 4, 8, 16, 24, 36, 48, 70]
 THREADS_4S = [1, 2, 4, 8, 16, 36, 72, 108, 142]
 LOCK_SET = ["mcs", "cna", "cna_opt", "c-bo-mcs", "hmcs", "tas", "ticket", "hbo"]
 MAIN_LOCKS = ["mcs", "cna", "cna_opt", "c-bo-mcs", "hmcs"]
+
+
+# -- subprocess harness (mirrors tests/_subproc.py — keep the two in sync) ----
+# Subprocesses must not inherit hardcoded machine paths, and must pin
+# JAX_PLATFORMS=cpu: with libtpu installed but no TPU attached, an unpinned
+# jax spends minutes probing TPU metadata endpoints.
+import os as _os
+
+REPO_ROOT = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+
+
+def subproc_env() -> dict:
+    env = dict(_os.environ)
+    env["PYTHONPATH"] = _os.path.join(REPO_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    return env

@@ -3,7 +3,8 @@ benches (serving scheduler, collective schedules, roofline report).
 
     PYTHONPATH=src python -m benchmarks.run [section ...]
 
-Sections: paper, locks, serving, collectives, roofline.  Default: all.
+Sections: paper, locks, restriction, serving, collectives, moe_ep, roofline.
+Default: all.
 """
 
 from __future__ import annotations
@@ -37,7 +38,9 @@ def locks_hostlevel():
 
 
 def main() -> int:
-    sections = sys.argv[1:] or ["paper", "locks", "serving", "collectives", "moe_ep", "roofline"]
+    sections = sys.argv[1:] or [
+        "paper", "locks", "restriction", "serving", "collectives", "moe_ep", "roofline"
+    ]
     t0 = time.time()
     if "paper" in sections:
         from . import paper_figures
@@ -45,6 +48,10 @@ def main() -> int:
         paper_figures.run_all()
     if "locks" in sections:
         locks_hostlevel()
+    if "restriction" in sections:
+        from . import restriction_bench
+
+        restriction_bench.run_all()
     if "serving" in sections:
         from . import serving_bench
 

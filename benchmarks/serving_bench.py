@@ -25,6 +25,9 @@ def policy_level(n_requests=4000, domains=4, switch_cost=8, service=1, seed=7):
         ("cna_thrF", lambda: CNAScheduler(fairness_threshold=0xF, seed=seed)),
         ("cna_thrFF", lambda: CNAScheduler(fairness_threshold=0xFF, seed=seed)),
         ("cna_thrFFFF", lambda: CNAScheduler(fairness_threshold=0xFFFF, seed=seed)),
+        # GCR-style admission control: only 16 requests circulate in the CNA
+        # queues at once, the rest wait passivated.
+        ("cna_rcr16", lambda: CNAScheduler(fairness_threshold=0xFF, seed=seed, max_active=16)),
     ]:
         rng = np.random.default_rng(seed)
         s = mk()

@@ -39,7 +39,9 @@ _NATIVE_DTYPES = {
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # jax.tree.flatten_with_path only exists from jax 0.4.36ish onwards;
+    # tree_util has carried the same function for much longer.
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     paths = ["".join(_fmt(k) for k in path) for path, _ in flat]
     leaves = [v for _, v in flat]
     return paths, leaves, treedef

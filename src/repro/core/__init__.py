@@ -1,6 +1,18 @@
-# The paper's primary contribution: the CNA lock (faithful host-side
-# implementation + deterministic NUMA simulation) and its admission policy
-# lifted to TPU-pod locality domains (scheduler + collective schedules).
+# The paper's primary contribution: the CNA discipline (one pure transition
+# core in ``discipline``; thread-lock / discrete-event / admission-queue
+# drivers around it) with pluggable locality topologies.
+from .discipline import (  # noqa: F401
+    CNADiscipline,
+    DisciplineConfig,
+    DisciplineStats,
+    Grant,
+    RestrictedDiscipline,
+    Scan,
+    SecondaryFlush,
+    Shuffle,
+    decide,
+)
+from .topology import Topology, flat, get_topology, pod, table  # noqa: F401
 from .cna import CNALock, CNANode, MCSLock, run_lock_stress  # noqa: F401
 from .policy import CNAAdmissionQueue, FIFOAdmissionQueue  # noqa: F401
 from .numasim import CostModel, Simulator, SimResult, TWO_SOCKET, FOUR_SOCKET, run_sweep  # noqa: F401

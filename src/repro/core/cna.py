@@ -1,15 +1,19 @@
-"""Compact NUMA-aware lock (CNA) — faithful executable transcription of the paper.
+"""Compact NUMA-aware lock (CNA) — the threaded driver of the discipline core.
 
-This module transcribes Figures 2-5 of Dice & Kogan, "Compact NUMA-aware Locks"
-(EuroSys 2019) into Python, line-for-line where possible.  Python has no raw
-CAS/SWAP on object attributes, so the two atomic instructions of the algorithm
-(SWAP on lock.tail in `lock`, CAS on lock.tail in `unlock`) are emulated by a
-single internal mutex guarding *only* those two operations — exactly the two
-touch points the paper identifies.  All other fields follow the paper's
-publication order.  The GIL makes wall-clock throughput meaningless here, so
-this implementation is for *algorithmic correctness* (mutual exclusion, queue
-splicing, starvation freedom); performance reproduction lives in
-``repro.core.numasim`` / ``repro.core.locks_sim``.
+This module keeps the *medium-specific* half of the paper's Figures 2-5:
+Python has no raw CAS/SWAP on object attributes, so the two atomic
+instructions of the algorithm (SWAP on lock.tail in `lock`, CAS on lock.tail
+in `unlock`) are emulated by a single internal mutex guarding *only* those two
+operations — exactly the two touch points the paper identifies — plus the
+local-spin thread parking and the linked-node pointer manipulation.  *Which*
+waiter gets the lock (find_successor, keep_lock_local, the Section-6 shuffle
+reduction) is decided by ``repro.core.discipline.decide`` — the same pure core
+the discrete-event simulator and the serving admission queue drive, so all
+three produce identical grant orders on a common schedule and seed.  The GIL
+makes wall-clock throughput meaningless here; this implementation is for
+*algorithmic correctness* (mutual exclusion, queue splicing, starvation
+freedom); performance reproduction lives in ``repro.core.numasim`` /
+``repro.core.locks_sim``.
 
 The ``spin`` field carries, as in the paper, either 0 (wait), 1 (lock granted,
 empty secondary queue) or a reference to the head node of the secondary queue
@@ -24,11 +28,8 @@ import threading
 import time
 from dataclasses import dataclass, field
 
-# Long-term fairness threshold (paper Fig. 5: 0xffff).  Tests shrink it to
-# exercise the secondary-queue flush path quickly.
-THRESHOLD = 0xFFFF
-# Shuffle-reduction threshold (paper Section 6: 0xff).
-THRESHOLD2 = 0xFF
+from .discipline import THRESHOLD, THRESHOLD2, DisciplineConfig, decide
+from .topology import Topology, flat
 
 
 class CNANode:
@@ -41,6 +42,25 @@ class CNANode:
         self.socket: int = -1
         self.sec_tail: CNANode | None = None
         self.next: CNANode | None = None
+
+
+class _chain_domains:
+    """Lazy domain view over a linked CNANode chain for ``decide`` — iterated
+    only when the decision scans, never materialized."""
+
+    __slots__ = ("head",)
+
+    def __init__(self, head: CNANode | None) -> None:
+        self.head = head
+
+    def __bool__(self) -> bool:
+        return self.head is not None
+
+    def __iter__(self):
+        node = self.head
+        while node is not None:
+            yield node.socket
+            node = node.next
 
 
 @dataclass
@@ -72,9 +92,7 @@ class CNALock:
         self.tail: CNANode | None = None          # <-- the single word of state
         self._atomic = threading.Lock()           # emulates SWAP/CAS only
         self._numa_node_of = numa_node_of or (lambda: 0)
-        self._threshold = threshold
-        self._shuffle_reduction = shuffle_reduction
-        self._threshold2 = threshold2
+        self._cfg = DisciplineConfig(threshold, shuffle_reduction, threshold2)
         self._rng = random.Random(seed)
         self._rng_lock = threading.Lock()
         self.stats = CNAStats()
@@ -92,10 +110,6 @@ class CNALock:
                 return True
             return False
 
-    def _pseudo_rand(self) -> int:
-        with self._rng_lock:
-            return self._rng.getrandbits(30)
-
     # -- paper Fig. 3: cna_lock ---------------------------------------------
     def acquire(self, me: CNANode) -> None:
         me.next = None                             # L2
@@ -109,34 +123,6 @@ class CNALock:
         tail.next = me                             # L11
         while me.spin == 0:                        # L13: local spinning
             time.sleep(0)                          # CPU_PAUSE under the GIL
-
-    # -- paper Fig. 5 auxiliaries --------------------------------------------
-    def _keep_lock_local(self) -> bool:            # L77
-        return bool(self._pseudo_rand() & self._threshold)
-
-    def _find_successor(self, me: CNANode) -> CNANode | None:  # L51-74
-        nxt = me.next
-        my_socket = me.socket
-        if my_socket == -1:                        # L54
-            my_socket = self._numa_node_of()
-        if nxt.socket == my_socket:                # L56: immediate successor local
-            return nxt
-        sec_head = nxt                             # L57
-        sec_tail = nxt                             # L58
-        cur = nxt.next                             # L59
-        while cur is not None:                     # L61: traverse main queue
-            if cur.socket == my_socket:            # L63
-                if isinstance(me.spin, CNANode):   # L64: secondary queue non-empty
-                    me.spin.sec_tail.next = sec_head  # L65
-                else:
-                    me.spin = sec_head             # L66
-                sec_tail.next = None               # L67
-                me.spin.sec_tail = sec_tail        # L68
-                self.stats.shuffles += 1
-                return cur                         # L69
-            sec_tail = cur                         # L71
-            cur = cur.next                         # L72
-        return None                                # L74
 
     # -- paper Fig. 4: cna_unlock --------------------------------------------
     def release(self, me: CNANode) -> None:
@@ -154,33 +140,50 @@ class CNALock:
             while me.next is None:                 # L36: wait for successor link
                 time.sleep(0)
 
-        # Section 6 shuffle-reduction optimization (between L37 and L38).
-        if (
-            self._shuffle_reduction
-            and me.spin == 1
-            and (self._pseudo_rand() & self._threshold2)
-        ):
-            me.next.spin = 1
-            self.stats.handovers += 1
-            return
+        # L38-49 + Section 6: hand the shared core a *lazy* view of the main
+        # chain (walked only if the decision actually scans — the fast path
+        # and FIFO grants stay O(1), mirroring the deque drivers' _DomainView;
+        # interior links are stable and the chain only grows past the walked
+        # tail, so the live walk is one valid linearization, exactly like the
+        # paper's find_successor), then replay the decision on the pointers.
+        # n_secondary is only branched on for emptiness (its exact value feeds
+        # event payloads this driver discards), so the O(1) spin-field test
+        # stands in for counting the chain.
+        my_socket = me.socket
+        if my_socket == -1:                        # L54 (uncontended acquirer)
+            my_socket = self._numa_node_of()
+        with self._rng_lock:
+            d = decide(
+                _chain_domains(me.next),
+                1 if isinstance(me.spin, CNANode) else 0,
+                my_socket,
+                self._rng,
+                self._cfg,
+            )
 
-        # L40-49: determine next lock holder.
-        succ = None
-        if self._keep_lock_local():
-            succ = self._find_successor(me)        # L41
-        if succ is not None:
-            succ.spin = me.spin                    # L42 (never 0: me.spin is 1 or node)
-            self.stats.handovers += 1
+        self.stats.handovers += 1
+        if d.kind == "scan":                       # find_successor hit (L51-69)
+            prev, succ = None, me.next
+            for _ in range(d.index):               # re-walk the skipped prefix
+                prev, succ = succ, succ.next
+            if d.index:                            # skipped prefix -> secondary
+                sec_head, sec_tail = me.next, prev
+                if isinstance(me.spin, CNANode):   # L64: secondary non-empty
+                    me.spin.sec_tail.next = sec_head  # L65
+                else:
+                    me.spin = sec_head             # L66
+                sec_tail.next = None               # L67
+                me.spin.sec_tail = sec_tail        # L68
+                self.stats.shuffles += 1
+            succ.spin = me.spin                    # L42 (never 0: 1 or node)
             self.stats.local_handovers += 1
-        elif isinstance(me.spin, CNANode):         # L43: secondary queue non-empty
-            succ = me.spin                         # L44
+        elif d.kind == "flush":                    # L43-46: secondary head next
+            succ = me.spin
             succ.sec_tail.next = me.next           # L45: splice sec. queue in front
             succ.spin = 1                          # L46
-            self.stats.handovers += 1
             self.stats.secondary_flushes += 1
-        else:
-            me.next.spin = 1                       # L48
-            self.stats.handovers += 1
+        else:                                      # "fifo" (L48) / "fast_path" (§6)
+            me.next.spin = 1
 
 
 class MCSLock:
@@ -222,15 +225,24 @@ class _Shared:
 def run_lock_stress(
     lock_factory,
     n_threads: int,
-    n_sockets: int,
-    iters: int,
+    n_sockets: int | None = None,
+    iters: int = 100,
     *,
     cs_work: int = 0,
+    topology: Topology | None = None,
 ) -> _Shared:
     """Drive ``n_threads`` through acquire/CS/release cycles; return the shared
     cell for invariant checking (counter == n_threads * iters proves mutual
-    exclusion held for the increment sequence)."""
+    exclusion held for the increment sequence).  Thread -> virtual-socket
+    placement comes from ``topology`` (default: ``flat(n_sockets)``)."""
 
+    if topology is None:
+        topology = flat(n_sockets if n_sockets is not None else 2)
+    elif n_sockets is not None and n_sockets != topology.n_domains:
+        raise ValueError(
+            f"n_sockets={n_sockets} conflicts with topology "
+            f"{topology.name!r} ({topology.n_domains} domains); pass one"
+        )
     tls = threading.local()
 
     def socket_of() -> int:
@@ -240,7 +252,7 @@ def run_lock_stress(
     shared = _Shared()
 
     def body(tid: int) -> None:
-        tls.socket = tid % n_sockets
+        tls.socket = topology.domain_of(tid)
         node = CNANode()
         for _ in range(iters):
             lock.acquire(node)

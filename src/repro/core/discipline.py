@@ -1,0 +1,386 @@
+"""The CNA discipline as a pure transition core shared by every driver.
+
+The paper's contribution is one compact policy — a main queue, a secondary
+queue, and a fairness threshold — yet the seed repo transcribed it three
+times (threaded lock, discrete-event sim, serving admission queue) with
+drifting semantics.  This module is the single source of truth; the drivers
+keep only their medium-specific concerns:
+
+  ``repro.core.cna.CNALock``        atomics emulation + thread parking,
+                                    applies decisions to linked CNANodes;
+  ``repro.core.locks_sim.CNASim``   event-loop cost charging, consumes
+                                    ``Scan``/``Grant`` events to charge
+                                    ``c_scan_*`` / ``charge_xfer``;
+  ``repro.core.policy``             the domain-generic admission queue.
+
+Two layers:
+
+  * ``decide(main_domains, n_secondary, holder_domain, rng, cfg)`` — a pure
+    function from a queue *snapshot* to a ``Decision`` (which structural
+    action the paper's release path takes) plus typed events.  Determinism
+    contract: given the same snapshot and RNG stream it consumes the same
+    number of random draws in the same order in every driver, which is what
+    makes the grant-order equivalence test (tests/test_discipline.py) one
+    test over three drivers.
+  * ``CNADiscipline`` — the stateful form over (item, domain) deques, for
+    drivers whose queue *is* a deque.  ``arrive`` / ``release`` return typed
+    events instead of bumping ad-hoc counters.
+
+Paper mapping (Dice & Kogan, EuroSys 2019): ``decide`` covers Fig. 4 L40-49
+and Fig. 5 (find_successor, keep_lock_local) plus the Section 6 shuffle
+reduction; the main-queue-empty promote path is Fig. 4 L27-31.
+
+``RestrictedDiscipline`` layers GCR-style concurrency restriction ("Avoiding
+Scalability Collapse by Restricting Concurrency", Dice & Kogan 2019) over any
+discipline with this interface: at most ``max_active`` waiters circulate in
+the inner queue, the excess parks on a passivation list (emitting ``Park`` so
+drivers can model them as non-runnable), and a grant-count timeout rotates
+passivated waiters in so nobody starves.
+"""
+
+from __future__ import annotations
+
+import random
+from collections import deque
+from dataclasses import dataclass
+from typing import Any, Iterator, Sequence
+
+# Long-term fairness threshold (paper Fig. 5: 0xffff) and the Section-6
+# shuffle-reduction threshold (0xff).  Tests/benchmarks scale them down so
+# flush/fast-path events happen at simulated-run frequency.
+THRESHOLD = 0xFFFF
+THRESHOLD2 = 0xFF
+
+
+@dataclass(frozen=True)
+class DisciplineConfig:
+    threshold: int = THRESHOLD
+    shuffle_reduction: bool = False
+    threshold2: int = THRESHOLD2
+
+
+# -- typed events -------------------------------------------------------------
+# Emitted by transitions instead of mutating ad-hoc counters; each driver
+# folds them into its own accounting (CNAStats / SimResult / PolicyStats).
+
+
+@dataclass(frozen=True)
+class Scan:
+    """find_successor inspected ``n_local`` holder-domain and ``n_remote``
+    other-domain waiters (each inspection touches that waiter's cache line)."""
+
+    n_local: int
+    n_remote: int
+
+
+@dataclass(frozen=True)
+class Shuffle:
+    """A skipped remote-domain prefix of ``n_moved`` waiters moved from the
+    main queue to the secondary queue (Fig. 5 L64-68)."""
+
+    n_moved: int
+
+
+@dataclass(frozen=True)
+class SecondaryFlush:
+    """The secondary queue (``n_flushed`` waiters) re-entered the main queue —
+    the fairness/starvation-bound path (Fig. 4 L27-31 / L43-46)."""
+
+    n_flushed: int
+
+
+@dataclass(frozen=True)
+class Park:
+    """Concurrency restriction moved an arriving waiter to the passive list."""
+
+    item: Any
+    domain: int
+
+
+@dataclass(frozen=True)
+class Unpark:
+    """Concurrency restriction re-activated a passivated waiter."""
+
+    item: Any
+    domain: int
+
+
+@dataclass(frozen=True)
+class Grant:
+    """The next holder was chosen.  ``local`` is the paper's same-socket
+    handover; ``kind`` names the path that produced it; ``events`` carries
+    the satellite events of the same transition, in order."""
+
+    item: Any
+    domain: int
+    local: bool
+    kind: str  # "promote" | "fast_path" | "scan" | "flush" | "fifo"
+    events: tuple = ()
+
+
+# -- the pure decision function ----------------------------------------------
+
+
+class _DomainView:
+    """Lazy, read-only view of the domains in a deque of (item, domain).
+
+    ``decide`` draws its fast-path/keep_lock_local randomness *before*
+    scanning, so on most releases (shuffle-reduction hit, FIFO grant) it never
+    iterates — passing a view instead of a materialized list keeps those
+    grants O(1) in queue length."""
+
+    __slots__ = ("_q",)
+
+    def __init__(self, q) -> None:
+        self._q = q
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self):
+        return (dom for _, dom in self._q)
+
+
+@dataclass(frozen=True)
+class Decision:
+    """Structural action for one release, expressed over queue positions so
+    linked-list drivers can replay it on pointers and deque drivers on deques.
+
+      "none"       both queues empty: the lock becomes free
+      "promote"    main empty: secondary head takes over, rest becomes main
+      "fast_path"  Section-6 shuffle reduction: grant main[0], skip the scan
+      "scan"       find_successor hit: grant main[index], move main[:index]
+                   to the secondary queue
+      "flush"      no local waiter (or fairness roll failed): grant the
+                   secondary head, splice the rest in front of main
+      "fifo"       no local waiter, secondary empty: grant main[0]
+    """
+
+    kind: str
+    index: int = 0
+    events: tuple = ()
+
+
+def decide(
+    main_domains: "Sequence[int] | _DomainView",
+    n_secondary: int,
+    holder_domain: int,
+    rng: random.Random,
+    cfg: DisciplineConfig,
+) -> Decision:
+    if not main_domains:
+        if n_secondary == 0:
+            return Decision("none")
+        return Decision("promote", events=(SecondaryFlush(n_secondary),))
+
+    # Section 6 shuffle reduction: with an empty secondary queue, skip
+    # find_successor with high probability and grant the immediate successor.
+    if cfg.shuffle_reduction and n_secondary == 0 and rng.getrandbits(30) & cfg.threshold2:
+        return Decision("fast_path")
+
+    if rng.getrandbits(30) & cfg.threshold:  # keep_lock_local (Fig. 5 L77)
+        n_remote = 0
+        for i, d in enumerate(main_domains):
+            if d == holder_domain:
+                events: list = [Scan(1, n_remote)]
+                if i:
+                    events.append(Shuffle(i))
+                return Decision("scan", index=i, events=tuple(events))
+            n_remote += 1
+        # find_successor returned NULL (L74): every inspected waiter was
+        # remote; nothing moved.
+        scan = Scan(0, n_remote)
+        if n_secondary:
+            return Decision("flush", events=(scan, SecondaryFlush(n_secondary)))
+        return Decision("fifo", events=(scan,))
+
+    if n_secondary:
+        return Decision("flush", events=(SecondaryFlush(n_secondary),))
+    return Decision("fifo")
+
+
+# -- unified stats vocabulary -------------------------------------------------
+
+
+@dataclass
+class DisciplineStats:
+    """One stats vocabulary for every driver, folded from events."""
+
+    grants: int = 0
+    local_grants: int = 0
+    flushes: int = 0
+    shuffles: int = 0
+    scanned_local: int = 0
+    scanned_remote: int = 0
+    parked: int = 0
+    unparked: int = 0
+
+    @property
+    def locality(self) -> float:
+        return self.local_grants / max(1, self.grants)
+
+    @property
+    def scanned(self) -> int:
+        return self.scanned_local + self.scanned_remote
+
+    def consume(self, grant: "Grant | None", events: tuple = ()) -> None:
+        if grant is not None:
+            self.grants += 1
+            if grant.local:
+                self.local_grants += 1
+            events = grant.events + tuple(events)
+        for ev in events:
+            if isinstance(ev, Scan):
+                self.scanned_local += ev.n_local
+                self.scanned_remote += ev.n_remote
+            elif isinstance(ev, Shuffle):
+                self.shuffles += 1
+            elif isinstance(ev, SecondaryFlush):
+                self.flushes += 1
+            elif isinstance(ev, Park):
+                self.parked += 1
+            elif isinstance(ev, Unpark):
+                self.unparked += 1
+
+
+# -- the stateful core --------------------------------------------------------
+
+
+class CNADiscipline:
+    """The two queues + RNG stream, with ``arrive``/``release`` transitions.
+
+    Items are opaque; each carries the locality domain it was tagged with at
+    arrival.  ``release(holder_domain)`` plays the paper's unlock: it chooses
+    the next holder and restructures the queues, returning a ``Grant`` (with
+    the transition's satellite events attached) or ``None`` when empty.
+    """
+
+    def __init__(
+        self,
+        *,
+        threshold: int = THRESHOLD,
+        shuffle_reduction: bool = False,
+        threshold2: int = THRESHOLD2,
+        rng: random.Random | None = None,
+        seed: int = 0x5EED,
+    ) -> None:
+        self.cfg = DisciplineConfig(threshold, shuffle_reduction, threshold2)
+        self.rng = rng if rng is not None else random.Random(seed)
+        self._main: deque[tuple[Any, int]] = deque()
+        self._secondary: deque[tuple[Any, int]] = deque()
+
+    def __len__(self) -> int:
+        return len(self._main) + len(self._secondary)
+
+    def __iter__(self) -> Iterator[tuple[Any, int]]:
+        yield from self._main
+        yield from self._secondary
+
+    @property
+    def n_secondary(self) -> int:
+        return len(self._secondary)
+
+    def arrive(self, item: Any, domain: int) -> tuple:
+        """New waiters always join the main queue (paper Section 4)."""
+        self._main.append((item, domain))
+        return ()
+
+    def release(self, holder_domain: int) -> Grant | None:
+        d = decide(
+            _DomainView(self._main),
+            len(self._secondary),
+            holder_domain,
+            self.rng,
+            self.cfg,
+        )
+        if d.kind == "none":
+            return None
+        if d.kind in ("promote", "flush"):
+            # Grant the secondary head; the rest of the secondary queue is
+            # spliced in front of whatever remains of the main queue.
+            item, dom = self._secondary.popleft()
+            self._secondary.extend(self._main)
+            self._main = self._secondary
+            self._secondary = deque()
+        elif d.kind == "scan":
+            for _ in range(d.index):  # skipped remote prefix -> secondary
+                self._secondary.append(self._main.popleft())
+            item, dom = self._main.popleft()
+        else:  # "fast_path" | "fifo"
+            item, dom = self._main.popleft()
+        return Grant(item, dom, local=dom == holder_domain, kind=d.kind, events=d.events)
+
+    def drain(self) -> list[tuple[Any, int]]:
+        out = list(self._main) + list(self._secondary)
+        self._main.clear()
+        self._secondary.clear()
+        return out
+
+
+class RestrictedDiscipline:
+    """GCR-style concurrency restriction over any discipline core.
+
+    At most ``max_active`` waiters circulate in the inner queue; later
+    arrivals park on a passivation FIFO (``Park``) where drivers treat them
+    as non-runnable — that is the whole mechanism by which restriction avoids
+    scalability collapse under oversubscription.  Activation (``Unpark``)
+    happens (a) whenever a grant opens an active slot, and (b) every
+    ``rotate_after`` grants *unconditionally* — the grant-count analog of
+    GCR's timeout, bounding any waiter's passive residence even if the
+    active set never drains.  Locality is untouched: the inner discipline
+    still orders the active set.
+    """
+
+    def __init__(self, inner, *, max_active: int = 8, rotate_after: int = 64) -> None:
+        if max_active < 1:
+            raise ValueError("max_active must be >= 1")
+        self.inner = inner
+        self.max_active = max_active
+        self.rotate_after = rotate_after
+        self._passive: deque[tuple[Any, int]] = deque()
+        self._grants = 0
+
+    def __len__(self) -> int:
+        return len(self.inner) + len(self._passive)
+
+    def __iter__(self) -> Iterator[tuple[Any, int]]:
+        yield from self.inner
+        yield from self._passive
+
+    @property
+    def n_passive(self) -> int:
+        return len(self._passive)
+
+    def arrive(self, item: Any, domain: int) -> tuple:
+        if len(self.inner) < self.max_active:
+            return self.inner.arrive(item, domain)
+        self._passive.append((item, domain))
+        return (Park(item, domain),)
+
+    def _activate_one(self) -> Unpark:
+        item, dom = self._passive.popleft()
+        self.inner.arrive(item, dom)
+        return Unpark(item, dom)
+
+    def release(self, holder_domain: int) -> Grant | None:
+        extra: list = []
+        self._grants += 1
+        if self._passive and self._grants % self.rotate_after == 0:
+            extra.append(self._activate_one())  # fairness rotation (timeout)
+        g = self.inner.release(holder_domain)
+        if g is None:
+            if not self._passive:
+                return None
+            extra.append(self._activate_one())
+            g = self.inner.release(holder_domain)
+            assert g is not None
+        while self._passive and len(self.inner) < self.max_active:
+            extra.append(self._activate_one())
+        if extra:
+            g = Grant(g.item, g.domain, g.local, g.kind, g.events + tuple(extra))
+        return g
+
+    def drain(self) -> list[tuple[Any, int]]:
+        out = self.inner.drain() + list(self._passive)
+        self._passive.clear()
+        return out

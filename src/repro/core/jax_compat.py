@@ -1,0 +1,78 @@
+"""Version shims for jax APIs the repo uses that moved between releases.
+
+The container pins an older jax than some call sites were written against;
+everything funnels through here so the rest of the codebase can use the
+modern spelling unconditionally.
+
+  * ``shard_map``: new jax exposes ``jax.shard_map(f, mesh=..., in_specs=...,
+    out_specs=..., axis_names=..., check_vma=...)``; old jax has
+    ``jax.experimental.shard_map.shard_map`` where ``check_vma`` is spelled
+    ``check_rep`` and "manual only over ``axis_names``" is spelled as the
+    complementary ``auto=`` axis set.
+  * ``axis_size``: ``jax.lax.axis_size`` is new; ``psum(1, axis)`` is the
+    portable spelling (constant-folded at trace time).
+  * ``cost_analysis_dict``: ``compiled.cost_analysis()`` returns a dict on
+    new jax and a one-element list of dicts on old jax.
+  * ``axis_types_kw``: ``jax.make_mesh(..., axis_types=...)`` /
+    ``jax.sharding.AxisType`` only exist on newer jax; older meshes are
+    Auto-only, so omitting the kwarg is equivalent.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_size(axis_name) -> int:
+    """Size of a mapped mesh axis, usable inside shard_map/pmap bodies."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+try:
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AxisType = None
+
+
+def axis_types_kw(n_axes: int) -> dict:
+    """kwargs making every mesh axis Auto on jax versions that type axes."""
+    if _AxisType is None:
+        return {}
+    return {"axis_types": (_AxisType.Auto,) * n_axes}
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalised ``compiled.cost_analysis()``: always a (possibly empty) dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+try:  # jax >= 0.6-ish
+    from jax import shard_map as _shard_map_new
+
+    _NEW = True
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    _NEW = False
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=None):
+    if _NEW:
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        return _shard_map_new(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
+    kw = {}
+    if check_vma is not None:
+        kw["check_rep"] = check_vma
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _shard_map_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

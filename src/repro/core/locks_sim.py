@@ -8,27 +8,36 @@ Implemented locks (paper Section 7 evaluates this exact menagerie):
   * ``MCSSim``        — MCS queue lock: the paper's baseline
   * ``CNASim``        — the paper's contribution (two queues + fairness threshold)
   * ``CNAOptSim``     — CNA + Section-6 shuffle-reduction optimization
+  * ``RCNASim``       — CNA under GCR-style concurrency restriction
   * ``CohortSim``     — C-BO-MCS: per-socket MCS under a global backoff-TAS
   * ``HMCSSim``       — hierarchical MCS (Chabbi et al.)
 
 Each lock charges handover latencies through ``sim.charge_xfer`` (which also
 feeds the remote-transfer counters behind the paper's LLC-miss-rate figure).
-The CNA/CNAOpt disciplines are behaviourally identical to ``repro.core.cna``
-(same queue splicing, same threshold semantics); a property test cross-checks
-admission orders between the two on a common schedule.
+The CNA variants are thin drivers of ``repro.core.discipline``: the queue
+splicing lives in the shared core, and this module only consumes its typed
+events to charge ``c_scan_*`` / transfer costs into the simulator — which is
+what makes CNASim's grant order *identical* (not just similar) to
+``repro.core.cna.CNALock`` and ``repro.core.policy.CNAAdmissionQueue`` on a
+common schedule and seed (tests/test_discipline.py).
 """
 
 from __future__ import annotations
 
 from collections import deque
 
+from .discipline import (
+    THRESHOLD,
+    THRESHOLD2,
+    CNADiscipline,
+    Park,
+    RestrictedDiscipline,
+    Scan,
+    SecondaryFlush,
+    Shuffle,
+    Unpark,
+)
 from .numasim import LockSim
-
-# Defaults mirror the paper: keep_lock_local ~ 1/(THRESHOLD+1) flush chance per
-# handover; benchmarks pass scaled-down thresholds so that (flushes per run) in
-# a ~10-50M-cycle simulation matches the paper's (flushes per 10s run) regime.
-THRESHOLD = 0xFFFF
-THRESHOLD2 = 0xFF
 
 
 class MCSSim(LockSim):
@@ -57,96 +66,97 @@ class MCSSim(LockSim):
 
 
 class CNASim(LockSim):
-    """The paper's algorithm over the simulator's queue abstraction.
-
-    ``main``/``secondary`` mirror the two queues; scan costs model
-    find_successor touching each skipped node's cache line.
-    """
+    """Driver of the shared CNA core: the event loop's only jobs are the
+    uncontended fast path and turning the core's typed events into cycle
+    charges (``Scan`` -> ``c_scan_*`` + remote-transfer counters,
+    ``Shuffle``/``SecondaryFlush`` -> queue-restructuring stats)."""
 
     name = "cna"
     shuffle_reduction = False
 
     def __init__(self, sim, threshold: int = THRESHOLD, threshold2: int = THRESHOLD2) -> None:
         super().__init__(sim)
-        self.main: deque[int] = deque()
-        self.secondary: deque[int] = deque()
+        # the core draws from the simulator's RNG so runs stay bit-reproducible
+        self.core = self._make_core(
+            CNADiscipline(
+                threshold=threshold,
+                shuffle_reduction=self.shuffle_reduction,
+                threshold2=threshold2,
+                rng=sim.rng,
+            )
+        )
         self.holder: int | None = None
-        self.threshold = threshold
-        self.threshold2 = threshold2
+
+    def _make_core(self, inner):
+        return inner
 
     def arrive(self, tid: int):
-        if self.holder is None and not self.main:
+        if self.holder is None and not len(self.core):
             # Lock word free: single SWAP, exactly MCS's uncontended path.
             # (CNA's extra fields are touched only under contention — L10.)
             self.holder = tid
             return self.cm.c_atomic
-        self.main.append(tid)
+        self._consume(self.core.arrive(tid, self.socket(tid)))
         return None
 
-    def _keep_lock_local(self) -> bool:
-        return bool(self.rng.getrandbits(30) & self.threshold)
-
-    def _grant(self, tid: int, from_tid: int, extra: int = 0):
-        self.holder = tid
-        return tid, extra + self.sim.charge_xfer(self.socket(from_tid), self.socket(tid))
+    def _consume(self, events) -> int:
+        """Fold core events into simulator accounting; returns extra cycles."""
+        cost = 0
+        for ev in events:
+            if isinstance(ev, Scan):
+                # find_successor touches each inspected waiter's cache line
+                cost += ev.n_local * self.cm.c_scan_local + ev.n_remote * self.cm.c_scan_remote
+                self.sim.result.remote_transfers += ev.n_remote
+            elif isinstance(ev, (Shuffle, SecondaryFlush)):
+                self.sim.result.shuffles += 1
+            elif isinstance(ev, Park):
+                self.parked.add(ev.item)
+            elif isinstance(ev, Unpark):
+                self.parked.discard(ev.item)
+        return cost
 
     def release(self, tid: int):
-        if not self.main:
-            if not self.secondary:
-                self.holder = None
-                return None
-            # L28: whole secondary queue becomes the main queue.
-            self.main = self.secondary
-            self.secondary = deque()
-            nxt = self.main.popleft()
-            self.sim.result.shuffles += 1
-            return self._grant(nxt, tid)
-
-        # Section 6 shuffle reduction: secondary empty -> skip find_successor
-        # with high probability and hand to the immediate successor.
-        if (
-            self.shuffle_reduction
-            and not self.secondary
-            and (self.rng.getrandbits(30) & self.threshold2)
-        ):
-            return self._grant(self.main.popleft(), tid)
-
-        scan_cost = 0
-        if self._keep_lock_local():
-            # find_successor: walk the main queue for a same-socket thread,
-            # paying a per-node inspection cost; on success move the skipped
-            # prefix to the secondary queue (L64-68).
-            me_socket = self.socket(tid)
-            for i, cand in enumerate(self.main):
-                if self.socket(cand) == me_socket:
-                    scan_cost += self.cm.c_scan_local
-                else:
-                    scan_cost += self.cm.c_scan_remote
-                    self.sim.result.remote_transfers += 1
-                if self.socket(cand) == me_socket:
-                    for _ in range(i):
-                        self.secondary.append(self.main.popleft())
-                    if i:
-                        self.sim.result.shuffles += 1
-                    nxt = self.main.popleft()
-                    return self._grant(nxt, tid, extra=scan_cost)
-            # No local successor found: find_successor returned NULL (L74).
-
-        if self.secondary:
-            # L43-46: hand to secondary head; splice the rest of the secondary
-            # queue in front of the remaining main queue.
-            nxt = self.secondary.popleft()
-            self.secondary.extend(self.main)
-            self.main = self.secondary
-            self.secondary = deque()
-            self.sim.result.shuffles += 1
-            return self._grant(nxt, tid, extra=scan_cost)
-        return self._grant(self.main.popleft(), tid, extra=scan_cost)
+        g = self.core.release(self.socket(tid))
+        if g is None:
+            self.holder = None
+            return None
+        extra = self._consume(g.events)
+        self.holder = g.item
+        return g.item, extra + self.sim.charge_xfer(self.socket(tid), self.socket(g.item))
 
 
 class CNAOptSim(CNASim):
     name = "cna_opt"
     shuffle_reduction = True
+
+
+class RCNASim(CNASim):
+    """CNA + GCR-style concurrency restriction: at most ``max_active`` waiters
+    spin in the CNA queues; the rest park (non-runnable, so they don't count
+    against ``n_cores`` in the simulator's oversubscription model).  Defaults
+    leave two cores of headroom for the holder and threads in their
+    non-critical sections."""
+
+    name = "cna_rcr"
+
+    def __init__(
+        self,
+        sim,
+        threshold: int = THRESHOLD,
+        threshold2: int = THRESHOLD2,
+        max_active: int | None = None,
+        rotate_after: int = 64,
+    ) -> None:
+        if max_active is None:
+            max_active = max(1, (sim.n_cores or 10) - 2)
+        self._max_active = max_active
+        self._rotate_after = rotate_after
+        super().__init__(sim, threshold=threshold, threshold2=threshold2)
+
+    def _make_core(self, inner):
+        return RestrictedDiscipline(
+            inner, max_active=self._max_active, rotate_after=self._rotate_after
+        )
 
 
 class TASSim(LockSim):
@@ -362,5 +372,5 @@ class HMCSSim(CohortSim):
 
 ALL_LOCKS = {
     cls.name: cls
-    for cls in [TASSim, TicketSim, HBOSim, MCSSim, CNASim, CNAOptSim, CohortSim, HMCSSim]
+    for cls in [TASSim, TicketSim, HBOSim, MCSSim, CNASim, CNAOptSim, RCNASim, CohortSim, HMCSSim]
 }

@@ -28,6 +28,8 @@ import heapq
 import random
 from dataclasses import dataclass, field, replace
 
+from .topology import Topology, flat
+
 
 @dataclass(frozen=True)
 class CostModel:
@@ -38,9 +40,12 @@ class CostModel:
     c_l1: int = 8               # hit on socket-local (or own) line
     c_local_xfer: int = 60      # cache-line transfer within a socket
     c_remote_xfer: int = 400    # cache-line transfer across sockets
+    c_cross_xfer: int = 1000    # cache-line transfer across groups (e.g. pods)
     c_storm: int = 18           # extra per-spinner cost for global spinning
     c_scan_local: int = 10      # CNA find_successor: inspect local node
     c_scan_remote: int = 70     # CNA find_successor: inspect remote node
+    c_preempt: int = 30_000     # scheduling quantum lost when the grantee was
+                                # descheduled (oversubscription, n_cores set)
     cs_base: int = 450          # critical-section compute (AVL ops etc.)
     n_write_lines: int = 2      # shared lines written per CS (migrate w/ owner)
     n_read_lines: int = 4       # shared lines read per CS (miss if dirty-remote)
@@ -68,6 +73,7 @@ class SimResult:
     local_transfers: int = 0
     handovers: int = 0
     shuffles: int = 0
+    preemptions: int = 0
 
     @property
     def throughput_ops_per_us(self) -> float:
@@ -107,6 +113,10 @@ class LockSim:
         self.sim = sim
         self.cm = sim.cm
         self.rng = sim.rng
+        # tids currently passivated (blocked in the kernel, not runnable);
+        # maintained by concurrency-restricting disciplines, read by the
+        # simulator's oversubscription/preemption model.
+        self.parked: set[int] = set()
 
     # returns cycles-until-grant if the arriving thread acquires immediately,
     # or None if it must wait.
@@ -128,20 +138,35 @@ class Simulator:
         self,
         lock_cls,
         n_threads: int,
-        n_sockets: int,
+        n_sockets: int | None = None,
         cm: CostModel | None = None,
         *,
         seed: int = 42,
         duration_cycles: int = 20_000_000,
         noncs_cycles: int | None = None,
         lock_kwargs: dict | None = None,
+        topology: Topology | None = None,
+        n_cores: int | None = None,
     ) -> None:
+        if topology is None:
+            topology = flat(n_sockets if n_sockets is not None else 2)
+        elif n_sockets is not None and n_sockets != topology.n_domains:
+            raise ValueError(
+                f"n_sockets={n_sockets} conflicts with topology "
+                f"{topology.name!r} ({topology.n_domains} domains); pass one"
+            )
+        self.topology = topology
         self.cm = cm or TWO_SOCKET
         self.rng = random.Random(seed)
         self.n_threads = n_threads
-        self.n_sockets = n_sockets
+        self.n_sockets = topology.n_domains
         self.duration = duration_cycles
         self.noncs = self.cm.noncs_base if noncs_cycles is None else noncs_cycles
+        # n_cores models oversubscription: when more threads are runnable than
+        # cores, a granted thread may have been descheduled and eats a quantum
+        # (c_preempt) before it notices the handover — the collapse mechanism
+        # concurrency restriction exists to avoid.  None disables the model.
+        self.n_cores = n_cores
         self.lock = lock_cls(self, **(lock_kwargs or {}))
         # shared-data line ownership (tid of last writer); -1 = clean.
         # Core granularity matters: a line written by another core on the
@@ -152,7 +177,7 @@ class Simulator:
         self.result = SimResult(
             name=self.lock.name,
             n_threads=n_threads,
-            n_sockets=n_sockets,
+            n_sockets=self.n_sockets,  # topology's domain count, never None
             ops=0,
             cycles=0,
             per_thread_ops=[0] * n_threads,
@@ -160,10 +185,10 @@ class Simulator:
         self._events: list[tuple[int, int, str, int]] = []  # (time, seq, kind, tid)
         self._seq = 0
 
-    # Threads are spread round-robin across sockets — the paper does not pin
-    # threads, and a loaded scheduler approximates an even spread.
+    # Thread placement is the topology's business (the paper does not pin
+    # threads; flat round-robin approximates a loaded scheduler's spread).
     def socket_of(self, tid: int) -> int:
-        return tid % self.n_sockets
+        return self.topology.domain_of(tid)
 
     # -- accounting helpers used by lock disciplines -------------------------
     def charge_xfer(self, s_from: int, s_to: int) -> int:
@@ -171,7 +196,20 @@ class Simulator:
             self.result.local_transfers += 1
             return self.cm.c_local_xfer
         self.result.remote_transfers += 1
-        return self.cm.c_remote_xfer
+        return self.topology.xfer_cycles(self.cm, s_from, s_to)
+
+    def preempt_penalty(self) -> int:
+        """Grantee-wakeup penalty under oversubscription (0 if n_cores unset,
+        so pre-existing seeds consume an identical RNG stream)."""
+        if self.n_cores is None:
+            return 0
+        runnable = self.n_threads - len(self.lock.parked)
+        if runnable <= self.n_cores:
+            return 0
+        if self.rng.random() < 1.0 - self.n_cores / runnable:
+            self.result.preemptions += 1
+            return self.cm.c_preempt
+        return 0
 
     def _push(self, t: int, kind: str, tid: int) -> None:
         self._seq += 1
@@ -226,7 +264,7 @@ class Simulator:
                 if nxt is not None:
                     ntid, cost = nxt
                     self.result.handovers += 1
-                    self._push(now + cost, "enter", ntid)
+                    self._push(now + cost + self.preempt_penalty(), "enter", ntid)
                 self._push(now + self._noncs_cycles(), "arrive", tid)
         self.result.cycles = min(now, self.duration)
         return self.result
@@ -235,13 +273,15 @@ class Simulator:
 def run_sweep(
     lock_cls,
     thread_counts,
-    n_sockets: int,
+    n_sockets: int | None = None,
     cm: CostModel | None = None,
     *,
     seed: int = 42,
     duration_cycles: int = 20_000_000,
     noncs_cycles: int | None = None,
     lock_kwargs: dict | None = None,
+    topology: Topology | None = None,
+    n_cores: int | None = None,
 ) -> list[SimResult]:
     out = []
     for n in thread_counts:
@@ -254,6 +294,8 @@ def run_sweep(
             duration_cycles=duration_cycles,
             noncs_cycles=noncs_cycles,
             lock_kwargs=lock_kwargs,
+            topology=topology,
+            n_cores=n_cores,
         )
         out.append(sim.run())
     return out

@@ -3,53 +3,44 @@
 This is the load-bearing abstraction that carries the paper's idea into the
 rest of the framework: a queue of work items, each tagged with a *locality
 domain* (NUMA socket in the paper; TPU pod / KV-cache home in this framework),
-served with CNA's discipline:
-
-  * items whose domain matches the current holder's domain are served in FIFO
-    order from the **main queue**;
-  * on a grant, skipped remote-domain items move to the **secondary queue**
-    (paper Fig. 4/5, find_successor);
-  * the secondary queue is spliced back in front of the main queue when no
-    local item exists, or pseudo-randomly with P = 1/(threshold+1)
-    (``keep_lock_local``) — the starvation bound;
-  * the **shuffle-reduction** fast path skips the scan when the secondary
-    queue is empty (paper Section 6).
+served with CNA's discipline.  Since the refactor the discipline itself lives
+in ``repro.core.discipline`` — shared verbatim with the threaded lock and the
+discrete-event simulator — and this module is only the adapter that gives it
+the push/pop vocabulary schedulers expect, plus ``PolicyStats`` folded from
+the core's typed events.
 
 State is compact by construction: two deques and a counter — no per-domain
 structure, which is the whole point of the paper (contrast a "cohort
 scheduler" that would keep one queue per pod).
+
+``max_active`` layers GCR-style concurrency restriction over the discipline
+(``RestrictedDiscipline``): only that many items circulate in the CNA queues,
+the rest wait on a passivation list — admission control for schedulers whose
+scan/restructure costs grow with queue depth.
 """
 
 from __future__ import annotations
 
 import random
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from collections import deque
 from typing import Any, Generic, Iterable, TypeVar
 
+from .discipline import (
+    THRESHOLD,
+    THRESHOLD2,
+    CNADiscipline,
+    DisciplineStats,
+    RestrictedDiscipline,
+)
+
 T = TypeVar("T")
 
-THRESHOLD = 0xFFFF
-THRESHOLD2 = 0xFF
-
 
 @dataclass
-class PolicyStats:
-    grants: int = 0
-    local_grants: int = 0
-    flushes: int = 0
-    shuffles: int = 0
-    scanned: int = 0
-
-    @property
-    def locality(self) -> float:
-        return self.local_grants / max(1, self.grants)
-
-
-@dataclass
-class _Item(Generic[T]):
-    value: T
-    domain: int
+class PolicyStats(DisciplineStats):
+    """Alias of the unified event-derived stats (kept for the old name;
+    ``flushes``/``shuffles``/``scanned``/``locality`` read as before)."""
 
 
 class CNAAdmissionQueue(Generic[T]):
@@ -60,6 +51,8 @@ class CNAAdmissionQueue(Generic[T]):
         shuffle_reduction: bool = False,
         threshold2: int = THRESHOLD2,
         seed: int = 0xC0A,
+        max_active: int | None = None,
+        rotate_after: int = 64,
     ) -> None:
         # NOTE (adaptation decision): in the *lock*, shuffle reduction exists
         # to avoid the memory-system cost of restructuring the waiter queue
@@ -69,35 +62,26 @@ class CNAAdmissionQueue(Generic[T]):
         # rejoin, so the secondary queue stays empty and the fast path pins
         # the discipline at FIFO).  Hence default off; the flag remains for
         # the faithful-lock benchmarks.
-        self._main: deque[_Item[T]] = deque()
-        self._secondary: deque[_Item[T]] = deque()
-        self._threshold = threshold
-        self._threshold2 = threshold2
-        self._shuffle_reduction = shuffle_reduction
-        self._rng = random.Random(seed)
+        self._d = CNADiscipline(
+            threshold=threshold,
+            shuffle_reduction=shuffle_reduction,
+            threshold2=threshold2,
+            rng=random.Random(seed),
+        )
+        if max_active is not None:
+            self._d = RestrictedDiscipline(self._d, max_active=max_active, rotate_after=rotate_after)
         self.stats = PolicyStats()
 
     def __len__(self) -> int:
-        return len(self._main) + len(self._secondary)
+        return len(self._d)
 
     def push(self, value: T, domain: int) -> None:
         """New arrivals always join the main queue (paper Section 4)."""
-        self._main.append(_Item(value, domain))
+        self.stats.consume(None, self._d.arrive(value, domain))
 
     def extend(self, values: Iterable[tuple[T, int]]) -> None:
         for v, d in values:
             self.push(v, d)
-
-    def _keep_lock_local(self) -> bool:
-        return bool(self._rng.getrandbits(30) & self._threshold)
-
-    def _flush_secondary(self) -> None:
-        """Splice the secondary queue in *front* of the main queue (L45)."""
-        if self._secondary:
-            self._secondary.extend(self._main)
-            self._main = self._secondary
-            self._secondary = deque()
-            self.stats.flushes += 1
 
     def pop(self, current_domain: int) -> tuple[T, int] | None:
         """Grant the next item under the CNA discipline.
@@ -105,66 +89,28 @@ class CNAAdmissionQueue(Generic[T]):
         Returns ``(value, domain)`` or ``None`` if empty.  ``current_domain``
         plays the lock holder's socket.
         """
-        if not self._main:
-            if not self._secondary:
-                return None
-            self._flush_secondary()  # L28: secondary becomes main
-
-        # Shuffle-reduction fast path (paper Section 6): with the secondary
-        # queue empty, hand to the immediate successor — whatever its domain —
-        # with high probability, skipping the scan entirely.
-        if (
-            self._shuffle_reduction
-            and not self._secondary
-            and (self._rng.getrandbits(30) & self._threshold2)
-        ):
-            item = self._main.popleft()
-            self._record(item, current_domain)
-            return item.value, item.domain
-
-        if self._keep_lock_local():
-            for i, item in enumerate(self._main):
-                self.stats.scanned += 1
-                if item.domain == current_domain:
-                    for _ in range(i):
-                        self._secondary.append(self._main.popleft())
-                    if i:
-                        self.stats.shuffles += 1
-                    item = self._main.popleft()
-                    self._record(item, current_domain)
-                    return item.value, item.domain
-            # no local item: fall through to a fairness flush
-
-        self._flush_secondary()
-        item = self._main.popleft()
-        self._record(item, current_domain)
-        return item.value, item.domain
-
-    def _record(self, item: _Item[T], current_domain: int) -> None:
-        self.stats.grants += 1
-        if item.domain == current_domain:
-            self.stats.local_grants += 1
+        g = self._d.release(current_domain)
+        if g is None:
+            return None
+        self.stats.consume(g)
+        return g.item, g.domain
 
     def drain(self) -> list[tuple[T, int]]:
-        out = [(i.value, i.domain) for i in self._main]
-        out += [(i.value, i.domain) for i in self._secondary]
-        self._main.clear()
-        self._secondary.clear()
-        return out
+        return self._d.drain()
 
 
 class FIFOAdmissionQueue(Generic[T]):
     """Baseline discipline (MCS analogue) with the same interface."""
 
     def __init__(self, **_: Any) -> None:
-        self._q: deque[_Item[T]] = deque()
+        self._q: deque[tuple[T, int]] = deque()
         self.stats = PolicyStats()
 
     def __len__(self) -> int:
         return len(self._q)
 
     def push(self, value: T, domain: int) -> None:
-        self._q.append(_Item(value, domain))
+        self._q.append((value, domain))
 
     def extend(self, values: Iterable[tuple[T, int]]) -> None:
         for v, d in values:
@@ -173,13 +119,13 @@ class FIFOAdmissionQueue(Generic[T]):
     def pop(self, current_domain: int) -> tuple[T, int] | None:
         if not self._q:
             return None
-        item = self._q.popleft()
+        value, domain = self._q.popleft()
         self.stats.grants += 1
-        if item.domain == current_domain:
+        if domain == current_domain:
             self.stats.local_grants += 1
-        return item.value, item.domain
+        return value, domain
 
     def drain(self) -> list[tuple[T, int]]:
-        out = [(i.value, i.domain) for i in self._q]
+        out = list(self._q)
         self._q.clear()
         return out

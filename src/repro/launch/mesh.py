@@ -17,13 +17,14 @@ the paper's admission policy avoids).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core.jax_compat import axis_types_kw
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(shape))
+    return jax.make_mesh(shape, axes, **axis_types_kw(len(shape)))
 
 
 def make_host_mesh(model_parallel: int = 1):
@@ -33,7 +34,7 @@ def make_host_mesh(model_parallel: int = 1):
     return jax.make_mesh(
         (n // model_parallel, model_parallel),
         ("data", "model"),
-        axis_types=(AxisType.Auto, AxisType.Auto),
+        **axis_types_kw(2),
     )
 
 

@@ -53,18 +53,43 @@ class MeshContext:
 
 
 _ctx = threading.local()
+_NO_MESH = object()          # sentinel: traces ran with no mesh context
+# last mesh traced under (for cache invalidation); starts at the no-mesh
+# sentinel so the first use_mesh entry also invalidates anything traced at
+# top level before it (costs one clear of a cold cache at process start)
+_last_mesh: list = [_NO_MESH]
 
 
 def current_ctx() -> MeshContext | None:
     return getattr(_ctx, "value", None)
 
 
+def _note_mesh(mesh) -> None:
+    """Invalidate jax's trace caches when the effective mesh changes.
+
+    jax's internal trace caches key on function identity + avals, NOT on our
+    mesh context, so a re-trace under a *different* mesh (or under none, via
+    the ``_NO_MESH`` sentinel) can reuse a jaxpr whose sharding constraints
+    reference the old device set (the elastic-restart bug).  Clearing only on
+    an actual mesh change keeps the common single-mesh path at full cache
+    speed.  The sentinel (and jax's caches) are process-global, so a workload
+    that alternates meshes — across iterations or threads — recompiles on
+    every switch; give such a workload one mesh per *process*.  Known hole:
+    tracing at top level (outside any ``use_mesh``) after mesh use is not a
+    hookable transition — enter ``use_mesh(None)`` to trace mesh-free."""
+    if mesh != _last_mesh[0]:
+        jax.clear_caches()
+        _last_mesh[0] = mesh
+
+
 @contextlib.contextmanager
 def use_mesh(mesh: Mesh | None, rules: dict[str, Any] | None = None):
     old = getattr(_ctx, "value", None)
     if mesh is None:
+        _note_mesh(_NO_MESH)
         _ctx.value = None
     else:
+        _note_mesh(mesh)
         r = dict(DEFAULT_RULES)
         if rules:
             r.update(rules)
@@ -73,6 +98,10 @@ def use_mesh(mesh: Mesh | None, rules: dict[str, Any] | None = None):
         yield _ctx.value
     finally:
         _ctx.value = old
+        if old is not None:
+            # re-entering an outer context is also a mesh transition: code
+            # after a nested `use_mesh(B)` block traces under A again
+            _note_mesh(old.mesh)
 
 
 def _resolve(logical, dim: int, ctx: MeshContext):

@@ -49,6 +49,7 @@ class DecodeEngine:
         scheduler=None,
         eos: int | None = None,
         domain_switch_cost: int = 4,
+        topology=None,
     ):
         self.model = model
         self.params = params
@@ -56,13 +57,20 @@ class DecodeEngine:
         self.cache_len = cache_len
         # NB: schedulers define __len__, so `scheduler or default` would
         # silently replace an *empty* scheduler — compare to None explicitly.
-        self.scheduler = scheduler if scheduler is not None else CNAScheduler()
+        if scheduler is not None and topology is not None:
+            raise ValueError(
+                "pass topology via the scheduler (e.g. CNAScheduler(topology=...)); "
+                "an explicit scheduler's topology would silently win otherwise"
+            )
+        self.scheduler = scheduler if scheduler is not None else CNAScheduler(topology=topology)
         self.eos = eos
         self.slots = SlotCache.zeros(model, n_slots, cache_len)
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.active_req: dict[int, Request] = {}
         # simulated cost accounting: a domain switch stalls the pipe while the
-        # prefix/KV home moves across DCN (the paper's remote cache miss)
+        # prefix/KV home moves across DCN (the paper's remote cache miss);
+        # under a hierarchical topology the stall scales with the inter-domain
+        # distance (cross-pod moves cost double a same-pod move)
         self.domain_switch_cost = domain_switch_cost
         self.sim_time = 0
         self._prefill = jax.jit(model.prefill)
@@ -70,17 +78,15 @@ class DecodeEngine:
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request):
-        req.submit_t = self.scheduler._clock
+        req.submit_t = self.scheduler.now
         self.scheduler.submit(req, req.domain)
 
     def _admit(self):
         while self.slots.free and len(self.scheduler):
-            before = self.scheduler.current_domain
             req = self.scheduler.next_request()
             if req is None:
                 break
-            if req.domain != before:
-                self.sim_time += self.domain_switch_cost
+            self.sim_time += self.domain_switch_cost * self.scheduler.last_admit_distance
             slot = self.slots.claim(req.rid)
             logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(req.prompt)[None]})
             cache["pos"] = jnp.asarray(cache["pos"], jnp.int32)
@@ -109,18 +115,15 @@ class DecodeEngine:
             hit_eos = self.eos is not None and tok == self.eos
             past_len = int(self.slots.cache["pos"][slot]) >= self.cache_len - 1
             if req.done or hit_eos or past_len:
-                req.finish_t = self.scheduler._clock
+                req.finish_t = self.scheduler.now
                 self.slots.release(slot)
                 del self.active_req[slot]
 
     def run(self, requests: list[Request], max_ticks: int = 10_000) -> list[Request]:
         for r in requests:
             self.submit(r)
-        done: list[Request] = []
         ticks = 0
         while (len(self.scheduler) or self.active_req) and ticks < max_ticks:
-            n_before = len(self.active_req)
             self.step()
             ticks += 1
-            del n_before
         return requests

@@ -46,6 +46,10 @@ class SlotCache:
 
     def release(self, slot: int):
         self.owner.pop(slot, None)
+        # A freed slot must not advertise a stale sequence: zeroing pos makes
+        # the slot read as empty the moment it is reclaimed, so nothing can
+        # attend over the previous owner's KV between claim and insert.
+        self.cache["pos"] = self.cache["pos"].at[slot].set(0)
         self.free.append(slot)
         self.free.sort()
 

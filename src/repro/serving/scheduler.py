@@ -1,7 +1,8 @@
 """CNA continuous-batching admission scheduler.
 
 This is the paper's algorithm carried verbatim into the serving runtime via
-``repro.core.policy.CNAAdmissionQueue``:
+``repro.core.policy.CNAAdmissionQueue`` (itself a thin adapter over the shared
+``repro.core.discipline`` core):
 
   paper                      | serving
   ---------------------------+------------------------------------------
@@ -16,9 +17,17 @@ This is the paper's algorithm carried verbatim into the serving runtime via
                              | parked by find_successor)
   keep_lock_local threshold  | fairness_threshold (starvation bound)
   remote cache miss          | domain switch => KV/prefix migration cost
+  machine topology           | ``repro.core.topology.Topology``: domains are
+                             | named positions in a fabric, and a switch's
+                             | cost scales with inter-domain *distance*
+                             | (same pod vs cross pod), not a constant
 
 State is compact by construction (two deques + a counter), the paper's
 argument against per-domain ("cohort") scheduler structures.
+
+``max_active`` enables GCR-style concurrency restriction (admission control):
+only that many queued requests circulate in the CNA queues, the rest wait on
+a passivation list until slots of the active set drain.
 
 ``SchedulerMetrics`` counts domain switches and per-domain service so
 benchmarks can reproduce the paper's throughput/fairness trade-off curves in
@@ -30,6 +39,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.policy import CNAAdmissionQueue, FIFOAdmissionQueue
+from repro.core.topology import Topology, get_topology
 
 
 @dataclass
@@ -37,6 +47,7 @@ class SchedulerMetrics:
     admitted: int = 0
     local_admits: int = 0
     domain_switches: int = 0
+    switch_distance: int = 0   # sum of topology distances over switches
     per_domain: dict = field(default_factory=dict)
     waits: list = field(default_factory=list)
 
@@ -55,13 +66,36 @@ class SchedulerMetrics:
 
 
 class _BaseScheduler:
-    def __init__(self, queue):
+    def __init__(self, queue, topology: Topology | None = None):
         self._q = queue
+        self.topology = get_topology(topology) if topology is not None else None
         self.current_domain = 0
         self.metrics = SchedulerMetrics()
         self._clock = 0
+        # distance of the most recent admission's switch (0 when local);
+        # the engine charges migration cost from this instead of recomputing
+        self.last_admit_distance = 0
+
+    @property
+    def now(self) -> int:
+        """Current scheduler tick (public: callers must not poke _clock)."""
+        return self._clock
+
+    def distance_to(self, domain: int) -> int:
+        """Distance of a hypothetical switch from the current domain: 0 when
+        local, 1 under a flat (or absent) topology, 2 across groups."""
+        if domain == self.current_domain:
+            return 0
+        if self.topology is None:
+            return 1
+        return self.topology.distance(self.current_domain, domain)
 
     def submit(self, request, domain: int):
+        if self.topology is not None and not 0 <= domain < self.topology.n_domains:
+            raise ValueError(
+                f"domain {domain} out of range for topology "
+                f"{self.topology.name!r} ({self.topology.n_domains} domains)"
+            )
         self._q.push((request, self._clock), domain)
 
     def __len__(self):
@@ -78,8 +112,11 @@ class _BaseScheduler:
         self.metrics.per_domain[domain] = self.metrics.per_domain.get(domain, 0) + 1
         if domain == self.current_domain:
             self.metrics.local_admits += 1
+            self.last_admit_distance = 0
         else:
             self.metrics.domain_switches += 1
+            self.last_admit_distance = self.distance_to(domain)
+            self.metrics.switch_distance += self.last_admit_distance
             self.current_domain = domain
         return request
 
@@ -88,14 +125,30 @@ class _BaseScheduler:
 
 
 class CNAScheduler(_BaseScheduler):
-    def __init__(self, *, fairness_threshold: int = 0xFFFF, shuffle_reduction: bool = False, seed: int = 0xC0A):
+    def __init__(
+        self,
+        *,
+        fairness_threshold: int = 0xFFFF,
+        shuffle_reduction: bool = False,
+        seed: int = 0xC0A,
+        topology: Topology | None = None,
+        max_active: int | None = None,
+        rotate_after: int = 64,
+    ):
         super().__init__(
-            CNAAdmissionQueue(threshold=fairness_threshold, shuffle_reduction=shuffle_reduction, seed=seed)
+            CNAAdmissionQueue(
+                threshold=fairness_threshold,
+                shuffle_reduction=shuffle_reduction,
+                seed=seed,
+                max_active=max_active,
+                rotate_after=rotate_after,
+            ),
+            topology=topology,
         )
 
 
 class FIFOScheduler(_BaseScheduler):
     """MCS-admission baseline: strict arrival order, domain-oblivious."""
 
-    def __init__(self, **_):
-        super().__init__(FIFOAdmissionQueue())
+    def __init__(self, *, topology: Topology | None = None, **_):
+        super().__init__(FIFOAdmissionQueue(), topology=topology)

@@ -1,0 +1,20 @@
+"""Shared harness for tests that spawn subprocesses with faked device meshes.
+
+Subprocesses must not inherit hardcoded machine paths (the suite also runs on
+CI runners), and must pin ``JAX_PLATFORMS=cpu`` — with libtpu installed but no
+TPU attached, an unpinned jax spends minutes probing TPU metadata endpoints.
+"""
+
+from __future__ import annotations
+
+import os
+from pathlib import Path
+
+REPO_ROOT = str(Path(__file__).resolve().parents[1])
+
+
+def run_env() -> dict:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    env["JAX_PLATFORMS"] = "cpu"
+    return env

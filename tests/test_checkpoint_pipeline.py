@@ -8,7 +8,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.checkpoint.manager import CheckpointManager
 from repro.data.pipeline import BigramLMDataset, ShardedLoader, UniformLMDataset

@@ -1,0 +1,303 @@
+"""One discipline, three drivers: grant-order equivalence + core unit tests.
+
+The refactor's contract is that ``CNALock`` (threaded), ``CNASim``
+(discrete-event) and ``CNAAdmissionQueue`` (serving admission) are thin
+drivers of ``repro.core.discipline`` — so on a shared arrival schedule and
+RNG seed all three must produce *identical* grant orders, including the
+shuffle-reduction fast path and the fairness-flush path under a tiny
+threshold.  Each driver is driven single-threaded through the same script:
+one holder plus N waiters enqueued upfront, then released one grant at a
+time.
+"""
+
+import random
+
+import pytest
+
+from repro.core.cna import CNALock, CNANode
+from repro.core.discipline import (
+    CNADiscipline,
+    DisciplineConfig,
+    DisciplineStats,
+    Park,
+    RestrictedDiscipline,
+    Scan,
+    SecondaryFlush,
+    Shuffle,
+    Unpark,
+    decide,
+)
+from repro.core.locks_sim import CNAOptSim, CNASim
+from repro.core.numasim import Simulator
+from repro.core.policy import CNAAdmissionQueue
+from repro.core.topology import flat, get_topology, pod, table
+
+
+# -- scripted drivers ---------------------------------------------------------
+
+
+def drive_lock(domains, holder_domain, seed, threshold, shuffle, threshold2):
+    """Single-threaded scripted drive of the threaded lock: waiters are linked
+    in exactly as Fig. 3 would (SWAP + next-link), minus the parking."""
+    cell = {"d": holder_domain}
+    lock = CNALock(
+        numa_node_of=lambda: cell["d"],
+        threshold=threshold,
+        shuffle_reduction=shuffle,
+        threshold2=threshold2,
+        seed=seed,
+    )
+    holder = CNANode()
+    lock.acquire(holder)  # uncontended fast path
+    nodes = []
+    for d in domains:
+        n = CNANode()
+        n.next, n.spin, n.socket = None, 0, d
+        tail = lock._swap_tail(n)
+        tail.next = n
+        nodes.append(n)
+    index_of = {id(n): i for i, n in enumerate(nodes)}
+    waiting = list(nodes)
+    order = []
+    cur = holder
+    while True:
+        lock.release(cur)
+        nxt = next((n for n in waiting if n.spin != 0), None)
+        if nxt is None:
+            break
+        order.append(index_of[id(nxt)])
+        waiting.remove(nxt)
+        cur = nxt
+    assert lock.tail is None
+    return order
+
+
+def drive_sim(domains, holder_domain, seed, threshold, shuffle, threshold2):
+    """Drive the simulator's lock object directly (no event loop): tid 0 is
+    the holder, tids 1..N the schedule."""
+    topo = table((holder_domain, *domains))
+    sim = Simulator(
+        CNAOptSim if shuffle else CNASim,
+        n_threads=len(domains) + 1,
+        topology=topo,
+        seed=seed,
+        lock_kwargs={"threshold": threshold, "threshold2": threshold2},
+    )
+    assert sim.lock.arrive(0) is not None  # uncontended: tid 0 holds
+    for tid in range(1, len(domains) + 1):
+        assert sim.lock.arrive(tid) is None
+    order = []
+    cur = 0
+    while True:
+        out = sim.lock.release(cur)
+        if out is None:
+            break
+        cur = out[0]
+        order.append(cur - 1)
+    return order
+
+
+def drive_queue(domains, holder_domain, seed, threshold, shuffle, threshold2):
+    q = CNAAdmissionQueue(
+        threshold=threshold, shuffle_reduction=shuffle, threshold2=threshold2, seed=seed
+    )
+    for i, d in enumerate(domains):
+        q.push(i, d)
+    order = []
+    dom = holder_domain
+    while len(q):
+        v, dom = q.pop(dom)
+        order.append(v)
+    return order
+
+
+SCHEDULES = {
+    "flat2_rr": [flat(2).domain_of(t) for t in range(12)],
+    "flat4_rr": [flat(4).domain_of(t) for t in range(17)],
+    "pod2x2": [pod(2, 2).domain_of(t) for t in range(15)],
+    "pod2x2_block": [pod(2, 2, cores_per_socket=3).domain_of(t) for t in range(18)],
+    "random3": [random.Random(9).randrange(3) for _ in range(25)],
+    "burst": [0] * 6 + [2] * 5 + [1] * 4,
+}
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULES))
+@pytest.mark.parametrize(
+    "threshold,shuffle,threshold2",
+    [
+        (0xFFFF, False, 0xFF),  # paper defaults: locality-dominant
+        (0x1, False, 0xFF),     # tiny fairness threshold: constant flushes
+        (0x0, False, 0xFF),     # keep_lock_local always false: FIFO+flush
+        (0xF, True, 0x3),       # shuffle reduction with a leaky fast path
+        (0xFFFF, True, 0xFF),   # shuffle reduction, fast path dominant
+    ],
+)
+@pytest.mark.parametrize("seed", [7, 0xBEEF])
+def test_three_drivers_identical_grant_order(sched, threshold, shuffle, threshold2, seed):
+    domains = SCHEDULES[sched]
+    holder = domains[0]
+    args = (domains, holder, seed, threshold, shuffle, threshold2)
+    lock_order = drive_lock(*args)
+    sim_order = drive_sim(*args)
+    queue_order = drive_queue(*args)
+    assert lock_order == sim_order == queue_order
+    assert sorted(lock_order) == list(range(len(domains)))  # nobody lost
+
+
+def test_equivalence_holds_for_hierarchical_topology_mapping():
+    """pod() placement produces different schedules than flat round-robin, and
+    the equivalence still holds on them (the discipline only compares domains
+    for equality; the hierarchy matters to cost charging, not ordering)."""
+    topo = pod(2, 2, cores_per_socket=3)  # block placement, not round-robin
+    domains = [topo.domain_of(t) for t in range(20)]
+    assert domains != [flat(4).domain_of(t) for t in range(20)]
+    args = (domains, domains[0], 3, 0xF, False, 0xFF)
+    assert drive_lock(*args) == drive_sim(*args) == drive_queue(*args)
+
+
+# -- pure core ----------------------------------------------------------------
+
+
+def test_decide_promote_and_empty():
+    rng = random.Random(0)
+    cfg = DisciplineConfig()
+    assert decide([], 0, 0, rng, cfg).kind == "none"
+    d = decide([], 3, 0, rng, cfg)
+    assert d.kind == "promote" and d.events == (SecondaryFlush(3),)
+
+
+def test_decide_scan_moves_remote_prefix():
+    rng = random.Random(0)
+    cfg = DisciplineConfig(threshold=(1 << 29) - 1)  # keep_lock_local ~ always
+    d = decide([1, 1, 0, 0], 0, 0, rng, cfg)
+    assert d.kind == "scan" and d.index == 2
+    assert d.events == (Scan(1, 2), Shuffle(2))
+
+
+def test_decide_failed_scan_flushes_secondary():
+    rng = random.Random(0)
+    cfg = DisciplineConfig(threshold=(1 << 29) - 1)
+    d = decide([1, 2], 2, 0, rng, cfg)
+    assert d.kind == "flush"
+    assert d.events == (Scan(0, 2), SecondaryFlush(2))
+
+
+def test_discipline_events_fold_into_stats():
+    core = CNADiscipline(threshold=(1 << 29) - 1, rng=random.Random(1))
+    stats = DisciplineStats()
+    for item, dom in [("a", 1), ("b", 1), ("c", 0), ("d", 1)]:
+        stats.consume(None, core.arrive(item, dom))
+    g = core.release(0)
+    stats.consume(g)
+    assert g.item == "c" and g.local and g.kind == "scan"
+    assert stats.grants == 1 and stats.local_grants == 1
+    assert stats.shuffles == 1 and stats.scanned == 3
+    # the two skipped remote items sit in the secondary queue
+    assert core.n_secondary == 2 and len(core) == 3
+
+
+def test_restricted_caps_active_set_and_conserves_items():
+    inner = CNADiscipline(threshold=0xF, rng=random.Random(2))
+    r = RestrictedDiscipline(inner, max_active=4, rotate_after=8)
+    for i in range(20):
+        r.arrive(i, i % 3)
+    assert len(inner) == 4 and r.n_passive == 16 and len(r) == 20
+    granted = []
+    dom = 0
+    while True:
+        g = r.release(dom)
+        if g is None:
+            break
+        # the active set never exceeds the cap (+1 transiently via rotation
+        # is re-absorbed before release returns)
+        assert len(inner) <= r.max_active
+        granted.append(g.item)
+        dom = g.domain
+    assert sorted(granted) == list(range(20))
+
+
+def test_restricted_rotation_bounds_passive_wait():
+    """A parked waiter re-enters the active set within bounded grants even
+    when hot waiters recirculate lock-style (restriction must not starve;
+    threshold=0 makes the inner discipline FIFO-with-flushes so the unparked
+    item is then granted promptly too)."""
+    inner = CNADiscipline(threshold=0, rng=random.Random(3))
+    r = RestrictedDiscipline(inner, max_active=2, rotate_after=4)
+    r.arrive("h1", 0)
+    r.arrive("h2", 0)
+    r.arrive("cold", 1)  # parked
+    assert r.n_passive == 1
+    seen = set()
+    unparked = set()
+    dom = 0
+    for _ in range(6):
+        g = r.release(dom)
+        seen.add(g.item)
+        unparked |= {e.item for e in g.events if isinstance(e, Unpark)}
+        dom = g.domain
+        r.arrive(g.item, 0 if g.item != "cold" else 1)  # lock-style recirculation
+    assert "cold" in unparked
+    assert "cold" in seen
+
+
+def test_restricted_emits_park_unpark():
+    r = RestrictedDiscipline(CNADiscipline(rng=random.Random(4)), max_active=1)
+    assert r.arrive("a", 0) == ()
+    evs = r.arrive("b", 1)
+    assert evs == (Park("b", 1),)
+    g = r.release(0)
+    assert g.item == "a"
+    assert any(isinstance(e, Unpark) and e.item == "b" for e in g.events)
+
+
+# -- topology -----------------------------------------------------------------
+
+
+def test_flat_topology_matches_seed_mapping():
+    topo = flat(4)
+    assert [topo.domain_of(t) for t in range(8)] == [t % 4 for t in range(8)]
+    assert topo.distance(1, 1) == 0
+    assert topo.distance(0, 3) == 1  # all sockets mutually remote, never 2
+
+
+def test_pod_topology_distances_and_block_placement():
+    topo = pod(2, 2, cores_per_socket=2)
+    # 4 sockets in 2 pods; consecutive ids fill a socket before spilling
+    assert [topo.domain_of(t) for t in range(8)] == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert topo.distance(0, 1) == 1  # same pod
+    assert topo.distance(0, 2) == 2  # cross pod
+    cm = __import__("repro.core.numasim", fromlist=["TWO_SOCKET"]).TWO_SOCKET
+    assert topo.xfer_cycles(cm, 0, 0) == cm.c_local_xfer
+    assert topo.xfer_cycles(cm, 0, 1) == cm.c_remote_xfer
+    assert topo.xfer_cycles(cm, 0, 2) == cm.c_cross_xfer
+
+
+def test_simulator_rejects_conflicting_n_sockets_and_topology():
+    with pytest.raises(ValueError, match="n_sockets=4 conflicts"):
+        Simulator(CNASim, n_threads=4, n_sockets=4, topology=pod(2, 4))
+    # consistent redundancy is allowed
+    Simulator(CNASim, n_threads=4, n_sockets=8, topology=pod(2, 4))
+
+
+def test_get_topology_coercions():
+    assert get_topology("two_socket").n_domains == 2
+    assert get_topology(3).n_domains == 3
+    t = table([0, 2, 1, 2])
+    assert get_topology(t) is t
+    assert [t.domain_of(i) for i in range(6)] == [0, 2, 1, 2, 0, 2]
+    with pytest.raises(KeyError):
+        get_topology("no_such_fabric")
+
+
+def test_hierarchical_sim_charges_cross_pod_premium():
+    """Under pod(2,2) the same thread count pays more for cross-pod handovers
+    than under flat(4), and CNA keeps most handovers socket-local either way."""
+    from repro.core.locks_sim import MCSSim
+    from repro.core.numasim import run_sweep
+
+    kw = dict(seed=11, duration_cycles=2_000_000, noncs_cycles=0)
+    flat_r = run_sweep(MCSSim, [16], topology=flat(4), **kw)[0]
+    pod_r = run_sweep(MCSSim, [16], topology=pod(2, 2), **kw)[0]
+    assert pod_r.ops < flat_r.ops  # cross-pod transfers cost more
+    cna_pod = run_sweep(CNASim, [16], topology=pod(2, 2), lock_kwargs={"threshold": 0xFF}, **kw)[0]
+    assert cna_pod.ops > pod_r.ops  # locality pays off even more on a fabric

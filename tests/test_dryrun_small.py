@@ -5,11 +5,17 @@ import subprocess
 import sys
 import textwrap
 
+from _subproc import REPO_ROOT, run_env
+
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax
-    from jax.sharding import AxisType
+    try:
+        from jax.sharding import AxisType
+        mesh_kw = {"axis_types": (AxisType.Auto,) * 3}
+    except ImportError:  # older jax: meshes are Auto-only
+        mesh_kw = {}
     from repro.configs.base import SHAPES, get_reduced_config, ShapeConfig
     from repro.launch import roofline as rl
     from repro.models.registry import build_model, input_specs
@@ -17,8 +23,7 @@ _SCRIPT = textwrap.dedent("""
     from repro.training.step import (make_train_step, state_abstract,
                                      state_logical, tree_shardings)
 
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                         axis_types=(AxisType.Auto,) * 3)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), **mesh_kw)
     shapes = {
         "train": ShapeConfig("t", 64, 8, "train"),
         "prefill": ShapeConfig("p", 64, 8, "prefill"),
@@ -59,7 +64,7 @@ _SCRIPT = textwrap.dedent("""
 def test_dryrun_small_mesh_all_kinds():
     proc = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}, cwd="/root/repo",
+        env=run_env(), cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "DRYRUN_SMALL_OK" in proc.stdout

@@ -10,6 +10,8 @@ import pytest
 
 from repro.runtime.fault import HeartbeatMonitor, StragglerDetector, WorkerFailure
 
+from _subproc import REPO_ROOT, run_env
+
 
 def test_heartbeat_detects_dead_worker():
     t = [0.0]
@@ -103,8 +105,7 @@ def test_elastic_restart_across_meshes(tmp_path):
     proc = subprocess.run(
         [sys.executable, "-c", script],
         capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
-        cwd="/root/repo",
+        env=run_env(), cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "ELASTIC_OK" in proc.stdout

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _subproc import REPO_ROOT, run_env
+from repro.core.jax_compat import cost_analysis_dict
 from repro.launch.hlo_analysis import (
     _parse_groups,
     _wire_bytes,
@@ -18,12 +20,15 @@ def _compile(f, *args):
     return jax.jit(f).lower(*args).compile()
 
 
+_cost = cost_analysis_dict  # normalises the dict-vs-[dict] jax API drift
+
+
 def test_dot_flops_match_cost_analysis_scan_free():
     a = jnp.zeros((256, 512), jnp.float32)
     b = jnp.zeros((512, 128), jnp.float32)
     comp = _compile(lambda a, b: a @ b, a, b)
     got = analyze_hlo(comp.as_text()).flops
-    want = comp.cost_analysis()["flops"]
+    want = _cost(comp)["flops"]
     assert got == pytest.approx(want, rel=1e-6)
     assert got == pytest.approx(2 * 256 * 512 * 128, rel=1e-6)
 
@@ -43,7 +48,7 @@ def test_scan_flops_scale_with_trip_count():
     per_iter = 2 * 8 * 64 * 64
     # cost_analysis counts the body once; the analyzer must count 10x
     assert got == pytest.approx(10 * per_iter, rel=0.05)
-    assert comp.cost_analysis()["flops"] < got
+    assert _cost(comp)["flops"] < got
 
 
 def test_nested_scan_multiplicity():
@@ -130,6 +135,6 @@ def test_collectives_inside_scan_multiply():
     """)
     proc = subprocess.run(
         [sys.executable, "-c", script], capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}, cwd="/root/repo",
+        env=run_env(), cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]

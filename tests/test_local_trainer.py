@@ -4,11 +4,17 @@ import subprocess
 import sys
 import textwrap
 
+from _subproc import REPO_ROOT, run_env
+
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
+    try:
+        from jax.sharding import AxisType
+        mesh_kw = {"axis_types": (AxisType.Auto,) * 3}
+    except ImportError:  # older jax: meshes are Auto-only
+        mesh_kw = {}
     from repro.configs.base import get_reduced_config
     from repro.data.pipeline import BigramLMDataset
     from repro.models.registry import build_model
@@ -21,7 +27,7 @@ _SCRIPT = textwrap.dedent("""
     cfg = get_reduced_config("granite_3_8b").replace(accum=1, vocab=64)
     model = build_model(cfg)
     ds = BigramLMDataset(cfg.vocab, seq_len=32, global_batch=8 * N_PODS, seed=0, branching=4)
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), axis_types=(AxisType.Auto,) * 3)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"), **mesh_kw)
 
     with use_mesh(mesh):
         state = replicate_for_pods(init_state(model, jax.random.PRNGKey(0), cfg), N_PODS)
@@ -50,7 +56,7 @@ _SCRIPT = textwrap.dedent("""
 def test_pod_local_deferred_sync():
     proc = subprocess.run(
         [sys.executable, "-c", _SCRIPT], capture_output=True, text=True, timeout=900,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}, cwd="/root/repo",
+        env=run_env(), cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "LOCAL_TRAINER_OK" in proc.stdout

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import ModelConfig
 from repro.models.moe import _positions, declare_moe, moe_apply, moe_capacity

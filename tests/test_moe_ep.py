@@ -13,6 +13,8 @@ from repro.models.common import ParamBuilder
 from repro.models.moe import declare_moe
 from repro.models.moe_ep import ep_routing_stats
 
+from _subproc import REPO_ROOT, run_env
+
 
 def _cfg(**kw):
     base = dict(
@@ -58,7 +60,7 @@ _EP_SCRIPT = textwrap.dedent("""
 def test_ep_matches_tp_reference():
     proc = subprocess.run(
         [sys.executable, "-c", _EP_SCRIPT], capture_output=True, text=True, timeout=600,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}, cwd="/root/repo",
+        env=run_env(), cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-3000:]
     assert "EP_OK" in proc.stdout

@@ -2,7 +2,10 @@
 
 import random
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, st
 
 from repro.core.policy import CNAAdmissionQueue, FIFOAdmissionQueue
 

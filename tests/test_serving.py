@@ -104,3 +104,60 @@ def test_slot_reuse_and_release(small_model):
     eng.run(reqs)
     assert all(r.done for r in reqs)
     assert len(eng.slots.free) == 2 and not eng.active_req
+
+
+def test_released_slot_does_not_leak_stale_kv(small_model):
+    """Regression: SlotCache.release must zero the slot's position so a
+    re-claimed slot reads as empty (no stale KV visible) until insert, and a
+    request served from a reused slot decodes identically to a fresh one."""
+    cfg, model, params = small_model
+    # two requests forced through the same single slot, back to back
+    reqs = _requests(cfg, n=2, seed=6, plen=6, max_new=4)
+    eng = DecodeEngine(model, params, n_slots=1, cache_len=32)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    assert int(eng.slots.cache["pos"][0]) == 0  # released slot reads empty
+    for r in reqs:
+        ref = _greedy_reference(model, params, r.prompt, r.max_new)
+        assert r.out[: r.max_new] == ref
+
+
+def test_scheduler_rejects_out_of_range_domain():
+    from repro.core.topology import pod
+    from repro.serving.scheduler import FIFOScheduler as FS
+
+    s = FS(topology=pod(2, 2))
+    with pytest.raises(ValueError, match="domain 7 out of range"):
+        s.submit("r", 7)
+    s.submit("r", 3)  # in range: 4 domains
+
+
+def test_engine_rejects_conflicting_scheduler_and_topology():
+    from repro.core.topology import pod
+    from repro.serving.scheduler import FIFOScheduler as FS
+
+    with pytest.raises(ValueError, match="topology via the scheduler"):
+        DecodeEngine(None, None, scheduler=FS(), topology=pod(2, 2))
+
+
+def test_topology_scheduler_scales_switch_cost(small_model):
+    """Cross-pod admissions stall the engine twice as long as same-pod ones
+    under a hierarchical topology."""
+    from repro.core.topology import pod
+    from repro.serving.scheduler import FIFOScheduler as FS
+
+    cfg, model, params = small_model
+    topo = pod(2, 2)
+    # domains 0,2 are in different pods; 0,1 share a pod
+    far = [Request(rid=i, prompt=np.arange(4, dtype=np.int32), max_new=2,
+                   domain=[0, 2][i % 2]) for i in range(4)]
+    near = [Request(rid=i, prompt=np.arange(4, dtype=np.int32), max_new=2,
+                    domain=[0, 1][i % 2]) for i in range(4)]
+    times = {}
+    for name, reqs in [("far", far), ("near", near)]:
+        eng = DecodeEngine(model, params, n_slots=1, cache_len=32,
+                           scheduler=FS(topology=topo), domain_switch_cost=10)
+        eng.run(reqs)
+        times[name] = eng.sim_time
+        assert eng.scheduler.metrics.domain_switches > 0
+    assert times["far"] > times["near"]

@@ -10,6 +10,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.sharding import DEFAULT_RULES, spec_for, use_mesh
 
+from _subproc import REPO_ROOT, run_env
+
 
 def test_no_mesh_is_noop():
     assert spec_for((4, 8), ("batch", "embed")) == P()
@@ -48,7 +50,7 @@ _MESH_SCRIPT = textwrap.dedent("""
 def test_rules_on_multi_axis_mesh():
     proc = subprocess.run(
         [sys.executable, "-c", _MESH_SCRIPT], capture_output=True, text=True, timeout=300,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"}, cwd="/root/repo",
+        env=run_env(), cwd=REPO_ROOT,
     )
     assert proc.returncode == 0, proc.stderr[-2000:]
     assert "SHARDING_OK" in proc.stdout
