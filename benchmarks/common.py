@@ -15,10 +15,60 @@ def table(title: str, header: list[str], rows: list[list]):
     sys.stdout.flush()
 
 
+# --smoke: tiny iteration counts so CI can exercise every benchmark's code
+# path in seconds.  Claims still print but are not load-bearing at smoke
+# scale (the curves need full durations); run.py only gates on them in a
+# full run.
+SMOKE = False
+
+FAILED_CLAIMS: list[str] = []
+
+
+def smoke(full, tiny):
+    """Pick the full-scale or smoke-scale value for an iteration knob."""
+    return tiny if SMOKE else full
+
+
 def claim(name: str, ok: bool, detail: str = ""):
     status = "PASS" if ok else "FAIL"
+    if not ok:
+        FAILED_CLAIMS.append(name)
     print(f"CLAIM [{status}] {name}  {detail}")
     return ok
+
+
+def ascii_plot(title: str, xs, series: dict, *, width: int = 64, height: int = 16,
+               logy: bool = False):
+    """Paper-style ASCII line chart: one mark per series, shared y scale.
+
+    ``series`` maps name -> list of y values (same length as ``xs``).  Keeps
+    benchmark output self-contained (no matplotlib in the container)."""
+    import math
+
+    marks = "ox+*#@%&"
+    ys_all = [y for ys in series.values() for y in ys if y is not None]
+    if not ys_all:
+        return
+    f = (lambda v: math.log10(max(v, 1e-12))) if logy else (lambda v: v)
+    lo, hi = min(f(y) for y in ys_all), max(f(y) for y in ys_all)
+    span = (hi - lo) or 1.0
+    grid = [[" "] * width for _ in range(height)]
+    for si, (name, ys) in enumerate(series.items()):
+        for i, y in enumerate(ys):
+            if y is None:
+                continue
+            col = round(i * (width - 1) / max(1, len(xs) - 1))
+            row = height - 1 - round((f(y) - lo) / span * (height - 1))
+            grid[row][col] = marks[si % len(marks)]
+    print(f"\n## {title}")
+    ylab = "log10 " if logy else ""
+    print(f"  y: {ylab}[{lo:.3g} .. {hi:.3g}]   x: {xs[0]} .. {xs[-1]}")
+    for row in grid:
+        print("  |" + "".join(row))
+    print("  +" + "-" * width)
+    legend = "   ".join(f"{marks[i % len(marks)]}={name}" for i, name in enumerate(series))
+    print(f"   {legend}")
+    sys.stdout.flush()
 
 
 @contextmanager

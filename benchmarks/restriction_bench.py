@@ -7,40 +7,61 @@ scheduling quantum.  The simulator models exactly that with ``n_cores`` +
 ``c_preempt`` (``Simulator.preempt_penalty``), and ``cna_rcr`` wraps the CNA
 discipline in ``RestrictedDiscipline``: at most ``max_active`` waiters spin,
 the excess park (non-runnable), and a grant-count timeout rotates them in.
+``cna_rcr_adapt`` replaces the static cap with the shared
+``repro.placement.AdaptiveController`` — the cap walks to the collapse
+boundary online from the observed handover latencies.
 
-The sweep shows the collapse-avoidance curve the wrapper buys:
+Three sections:
 
-  * plain MCS/CNA throughput falls off a cliff past ``n_cores`` threads;
-  * restricted CNA stays near its peak while *preserving* CNA's locality
-    (remote-transfer rate stays far below MCS);
-  * everything is seeded and deterministic.
+  * ``run_all``      the collapse-avoidance sweep (static + adaptive caps);
+  * ``calibrate``    the ``c_preempt`` grid fit against the published GCR
+                     collapse depths — asserts the shipped ``CostModel``
+                     default is the grid argmin (ROADMAP "Calibrate the
+                     preemption model");
+  * ``fig_collapse`` a paper-style (ASCII) figure of normalized throughput
+                     vs offered threads, the GCR Fig. 1/2 shape.
 """
 
 from __future__ import annotations
 
-from repro.core.locks_sim import ALL_LOCKS
-from repro.core.numasim import run_sweep
+from dataclasses import replace
 
-from .common import claim, table
+from repro.core.locks_sim import ALL_LOCKS
+from repro.core.numasim import TWO_SOCKET, CostModel, run_sweep
+
+from . import common
+from .common import ascii_plot, claim, smoke, table
 
 THREADS = [4, 8, 16, 32, 64, 96]
 N_CORES = 16
-DUR = 4_000_000
 SEED = 42
 KW = {
     "cna": {"threshold": 0xFF},
     "cna_rcr": {"threshold": 0xFF, "max_active": N_CORES - 2},
+    "cna_rcr_adapt": {"threshold": 0xFF},
 }
 
+# Published collapse depths read off the GCR paper's motivating curves
+# (Figs. 1-2: AVL tree / LevelDB under MCS): throughput falls roughly an
+# order of magnitude once threads exceed cores, with a further slow decay
+# as oversubscription deepens.  The fit below chooses ``c_preempt`` so the
+# simulator reproduces these retention ratios.
+GCR_TARGET_RETAIN = {2: 0.12, 6: 0.08}  # threads/cores -> tp fraction of in-cores peak
 
-def _sweep(names, *, seed=SEED):
+
+def _dur() -> int:
+    return smoke(4_000_000, 150_000)
+
+
+def _sweep(names, *, seed=SEED, cm=None, threads=None):
     return {
         name: run_sweep(
             ALL_LOCKS[name],
-            THREADS,
+            threads or THREADS,
             2,
+            cm,
             seed=seed,
-            duration_cycles=DUR,
+            duration_cycles=_dur(),
             noncs_cycles=0,
             lock_kwargs=KW.get(name),
             n_cores=N_CORES,
@@ -49,8 +70,68 @@ def _sweep(names, *, seed=SEED):
     }
 
 
+def calibrate():
+    """Grid-fit ``c_preempt`` to the published GCR collapse retention ratios.
+
+    ``n_cores`` is a benchmark knob (the paper's machines are 16-80 hardware
+    threads; we sweep offered threads against a fixed 16), so the one free
+    parameter of the preemption model is the effective per-handover penalty.
+    The error is the summed |log(sim/target)| over the 2x and 6x
+    oversubscription points — log space because the published curves are
+    read off log-scaled throughput axes."""
+    import math
+
+    grid = smoke([5_000, 10_000, 20_000, 30_000], [5_000, 10_000, 20_000])
+    in_cores, over2, over6 = N_CORES, 2 * N_CORES, 6 * N_CORES
+    rows, errs = [], {}
+    for cp in grid:
+        cm = replace(TWO_SOCKET, c_preempt=cp)
+        res = _sweep(["cna"], cm=cm, threads=[in_cores, over2, over6])["cna"]
+        tp = {r.n_threads: r.throughput_ops_per_us for r in res}
+        r2, r6 = tp[over2] / tp[in_cores], tp[over6] / tp[in_cores]
+        errs[cp] = abs(math.log(r2 / GCR_TARGET_RETAIN[2])) + abs(
+            math.log(r6 / GCR_TARGET_RETAIN[6])
+        )
+        rows.append([cp, r2, r6, errs[cp]])
+    table(
+        f"c_preempt calibration vs GCR collapse targets "
+        f"(retain@2x={GCR_TARGET_RETAIN[2]}, retain@6x={GCR_TARGET_RETAIN[6]})",
+        ["c_preempt", "retain_2x", "retain_6x", "log_err"],
+        rows,
+    )
+    fit = min(errs, key=errs.get)
+    shipped = CostModel().c_preempt
+    claim(
+        "calibration: shipped c_preempt default is the grid-fit argmin",
+        fit == shipped,
+        f"fit={fit} shipped={shipped}",
+    )
+    return fit
+
+
+def fig_collapse(res=None):
+    """Paper-style figure: normalized throughput vs offered threads (the GCR
+    Fig. 1/2 collapse shape, plus the restricted/adaptive recovery)."""
+    names = ["mcs", "cna", "cna_rcr", "cna_rcr_adapt"]
+    res = res or _sweep(names)
+    i_fit = THREADS.index(N_CORES)
+    norm = {
+        n: [r.throughput_ops_per_us / max(res[n][i_fit].throughput_ops_per_us, 1e-9)
+            for r in res[n]]
+        for n in names
+    }
+    ascii_plot(
+        f"figGCR: throughput normalized to the in-cores ({N_CORES}-thread) point, "
+        f"log scale — collapse past {N_CORES} threads, restriction holds the line",
+        THREADS,
+        norm,
+        logy=True,
+    )
+    return res
+
+
 def run_all():
-    names = ["mcs", "cna", "cna_rcr"]
+    names = ["mcs", "cna", "cna_rcr", "cna_rcr_adapt"]
     res = _sweep(names)
     rows = [
         [t]
@@ -67,6 +148,12 @@ def run_all():
         + [f"remote_{n}" for n in names],
         rows,
     )
+    fig_collapse(res)
+    calibrate()
+    if common.SMOKE:
+        # smoke mode only exercises the code paths; the claims below need
+        # full durations for the curves to separate.
+        return res
 
     tp = {n: [r.throughput_ops_per_us for r in res[n]] for n in names}
     i_fit = THREADS.index(N_CORES)  # last thread count that fits in cores
@@ -86,6 +173,11 @@ def run_all():
         f"ratio={tp['cna_rcr'][-1] / max(tp['cna'][-1], 1e-9):.2f}",
     )
     claim(
+        "restriction: adaptive cap recovers most of the static-cap win (>=2x plain CNA)",
+        tp["cna_rcr_adapt"][-1] >= 2 * tp["cna"][-1],
+        f"ratio={tp['cna_rcr_adapt'][-1] / max(tp['cna'][-1], 1e-9):.2f}",
+    )
+    claim(
         "restriction: parked waiters mean almost no preemptions for cna_rcr",
         res["cna_rcr"][-1].preemptions < 0.05 * max(1, res["cna"][-1].preemptions),
         f"{res['cna_rcr'][-1].preemptions} vs {res['cna'][-1].preemptions}",
@@ -95,10 +187,11 @@ def run_all():
         res["cna_rcr"][-1].remote_rate < 0.5 * res["mcs"][-1].remote_rate,
         f"{res['cna_rcr'][-1].remote_rate:.2f} vs {res['mcs'][-1].remote_rate:.2f}",
     )
-    res2 = _sweep(["cna_rcr"])
+    res2 = _sweep(["cna_rcr", "cna_rcr_adapt"])
     claim(
-        "restriction: sweep is deterministic (same seed, same ops)",
-        [r.ops for r in res2["cna_rcr"]] == [r.ops for r in res["cna_rcr"]],
+        "restriction: sweep is deterministic (same seed, same ops; adaptive included)",
+        [r.ops for r in res2["cna_rcr"]] == [r.ops for r in res["cna_rcr"]]
+        and [r.ops for r in res2["cna_rcr_adapt"]] == [r.ops for r in res["cna_rcr_adapt"]],
         "",
     )
     return res

@@ -1,10 +1,16 @@
 """Benchmark orchestrator: one section per paper table/figure + the framework
-benches (serving scheduler, collective schedules, roofline report).
+benches (serving scheduler, slot placement, collective schedules, roofline).
 
-    PYTHONPATH=src python -m benchmarks.run [section ...]
+    PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
-Sections: paper, locks, restriction, serving, collectives, moe_ep, roofline.
-Default: all.
+Sections: paper, locks, restriction, placement, serving, collectives, moe_ep,
+roofline.  Default: all.
+
+``--smoke`` shrinks every iteration knob (see benchmarks.common.smoke) so CI
+can exercise each benchmark's code path in seconds; claims still print but do
+not gate the exit code at smoke scale (the curves need full durations).  In a
+full run, any failed CLAIM makes the process exit 1 so regressions cannot
+scroll by silently.
 """
 
 from __future__ import annotations
@@ -18,8 +24,10 @@ def locks_hostlevel():
     correctness + admission-order behaviour, not wall-clock)."""
     from repro.core.cna import CNALock, MCSLock, run_lock_stress
 
+    from . import common
     from .common import claim, table
 
+    iters = common.smoke(300, 40)
     rows = []
     for name, factory in [
         ("cna", lambda sock: CNALock(numa_node_of=sock, threshold=0xF)),
@@ -27,19 +35,26 @@ def locks_hostlevel():
         ("mcs", lambda sock: MCSLock()),
     ]:
         t0 = time.time()
-        shared = run_lock_stress(factory, n_threads=8, n_sockets=2, iters=300)
+        shared = run_lock_stress(factory, n_threads=8, n_sockets=2, iters=iters)
         dt = time.time() - t0
-        ok = shared.counter == 8 * 300
+        ok = shared.counter == 8 * iters
         rows.append([name, shared.counter, f"{dt:.2f}s", "OK" if ok else "RACE!"])
         claim(f"locks: mutual exclusion holds under stress ({name})", ok,
               f"counter={shared.counter}")
-    table("host-threads lock stress (8 threads x 300 iters, 2 virtual sockets)",
+    table(f"host-threads lock stress (8 threads x {iters} iters, 2 virtual sockets)",
           ["lock", "counter", "time", "status"], rows)
 
 
 def main() -> int:
-    sections = sys.argv[1:] or [
-        "paper", "locks", "restriction", "serving", "collectives", "moe_ep", "roofline"
+    from . import common
+
+    args = sys.argv[1:]
+    if "--smoke" in args:
+        args.remove("--smoke")
+        common.SMOKE = True
+    sections = args or [
+        "paper", "locks", "restriction", "placement", "serving", "collectives",
+        "moe_ep", "roofline",
     ]
     t0 = time.time()
     if "paper" in sections:
@@ -52,6 +67,10 @@ def main() -> int:
         from . import restriction_bench
 
         restriction_bench.run_all()
+    if "placement" in sections:
+        from . import placement_bench
+
+        placement_bench.run_all()
     if "serving" in sections:
         from . import serving_bench
 
@@ -69,6 +88,12 @@ def main() -> int:
 
         roofline_report.run_all()
     print(f"\n(total: {time.time() - t0:.1f}s)")
+    if common.FAILED_CLAIMS:
+        print(f"{len(common.FAILED_CLAIMS)} claim(s) FAILED:")
+        for name in common.FAILED_CLAIMS:
+            print(f"  - {name}")
+        if not common.SMOKE:
+            return 1
     return 0
 
 

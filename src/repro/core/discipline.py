@@ -329,16 +329,44 @@ class RestrictedDiscipline:
     GCR's timeout, bounding any waiter's passive residence even if the
     active set never drains.  Locality is untouched: the inner discipline
     still orders the active set.
+
+    ``max_active`` is either a static int or any object with a ``cap``
+    attribute (``repro.placement.AdaptiveController``): the cap is re-read on
+    every transition, so a controller fed with handover latencies adjusts the
+    active set online.  A cap that shrinks below the current active count is
+    honoured lazily — arrivals park and the refill loop stays idle until
+    grants drain the active set under the new cap.
     """
 
-    def __init__(self, inner, *, max_active: int = 8, rotate_after: int = 64) -> None:
-        if max_active < 1:
-            raise ValueError("max_active must be >= 1")
+    def __init__(self, inner, *, max_active: "int | Any" = 8, rotate_after: int = 64) -> None:
         self.inner = inner
-        self.max_active = max_active
+        if isinstance(max_active, int):
+            if max_active < 1:
+                raise ValueError("max_active must be >= 1")
+            self.controller = None
+            self._max_active = max_active
+        else:
+            if getattr(max_active, "cap", 0) < 1:
+                raise ValueError("controller cap must be >= 1")
+            self.controller = max_active
+            self._max_active = None
         self.rotate_after = rotate_after
         self._passive: deque[tuple[Any, int]] = deque()
         self._grants = 0
+
+    @property
+    def max_active(self) -> int:
+        if self.controller is not None:
+            return self.controller.cap
+        return self._max_active
+
+    @max_active.setter
+    def max_active(self, value: int) -> None:
+        if self.controller is not None:
+            raise AttributeError("max_active is controller-driven; adjust the controller")
+        if value < 1:
+            raise ValueError("max_active must be >= 1")
+        self._max_active = value
 
     def __len__(self) -> int:
         return len(self.inner) + len(self._passive)

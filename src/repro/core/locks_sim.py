@@ -9,6 +9,8 @@ Implemented locks (paper Section 7 evaluates this exact menagerie):
   * ``CNASim``        — the paper's contribution (two queues + fairness threshold)
   * ``CNAOptSim``     — CNA + Section-6 shuffle-reduction optimization
   * ``RCNASim``       — CNA under GCR-style concurrency restriction
+  * ``AdaptiveRCNASim`` — RCNA with the cap driven online by the shared
+                        ``repro.placement.AdaptiveController``
   * ``CohortSim``     — C-BO-MCS: per-socket MCS under a global backoff-TAS
   * ``HMCSSim``       — hierarchical MCS (Chabbi et al.)
 
@@ -157,6 +159,44 @@ class RCNASim(CNASim):
         return RestrictedDiscipline(
             inner, max_active=self._max_active, rotate_after=self._rotate_after
         )
+
+
+class AdaptiveRCNASim(RCNASim):
+    """RCNA whose ``max_active`` is driven online by an ``AdaptiveController``
+    (repro.placement) instead of a static cap: the event loop reports every
+    handover's total latency (``observe_handover``), the controller classifies
+    preemption-stalled handovers against its cheap-handover floor, and the
+    active-set cap walks toward the collapse boundary from either side.  The
+    same controller object (and code path) drives ``CNAScheduler``, which is
+    what the cross-driver cap-trajectory test pins down."""
+
+    name = "cna_rcr_adapt"
+
+    def __init__(
+        self,
+        sim,
+        threshold: int = THRESHOLD,
+        threshold2: int = THRESHOLD2,
+        controller=None,
+        rotate_after: int = 64,
+    ) -> None:
+        if controller is None:
+            from repro.placement.controller import AdaptiveController
+
+            # start unrestricted: GCR's default posture is "no cap until the
+            # handover latencies say otherwise"
+            controller = AdaptiveController(initial=sim.n_threads, max_cap=sim.n_threads)
+        self.controller = controller
+        super().__init__(
+            sim,
+            threshold=threshold,
+            threshold2=threshold2,
+            max_active=controller,
+            rotate_after=rotate_after,
+        )
+
+    def observe_handover(self, cycles: int) -> None:
+        self.controller.observe(cycles)
 
 
 class TASSim(LockSim):
@@ -372,5 +412,8 @@ class HMCSSim(CohortSim):
 
 ALL_LOCKS = {
     cls.name: cls
-    for cls in [TASSim, TicketSim, HBOSim, MCSSim, CNASim, CNAOptSim, RCNASim, CohortSim, HMCSSim]
+    for cls in [
+        TASSim, TicketSim, HBOSim, MCSSim, CNASim, CNAOptSim, RCNASim,
+        AdaptiveRCNASim, CohortSim, HMCSSim,
+    ]
 }

@@ -16,7 +16,10 @@ scheduler" that would keep one queue per pod).
 ``max_active`` layers GCR-style concurrency restriction over the discipline
 (``RestrictedDiscipline``): only that many items circulate in the CNA queues,
 the rest wait on a passivation list — admission control for schedulers whose
-scan/restructure costs grow with queue depth.
+scan/restructure costs grow with queue depth.  It takes either a static int
+or an ``repro.placement.AdaptiveController``; with a controller, callers feed
+``observe_handover(latency)`` after each grant and the active-set cap tracks
+the observed handover cost online (the GCR feedback loop).
 """
 
 from __future__ import annotations
@@ -51,7 +54,7 @@ class CNAAdmissionQueue(Generic[T]):
         shuffle_reduction: bool = False,
         threshold2: int = THRESHOLD2,
         seed: int = 0xC0A,
-        max_active: int | None = None,
+        max_active: "int | Any | None" = None,
         rotate_after: int = 64,
     ) -> None:
         # NOTE (adaptation decision): in the *lock*, shuffle reduction exists
@@ -71,6 +74,22 @@ class CNAAdmissionQueue(Generic[T]):
         if max_active is not None:
             self._d = RestrictedDiscipline(self._d, max_active=max_active, rotate_after=rotate_after)
         self.stats = PolicyStats()
+
+    @property
+    def controller(self):
+        """The adaptive-cap controller, or None under a static/absent cap."""
+        return getattr(self._d, "controller", None)
+
+    @property
+    def max_active(self) -> int | None:
+        return getattr(self._d, "max_active", None)
+
+    def observe_handover(self, latency) -> None:
+        """Feed one handover-latency sample to the adaptive controller (no-op
+        without one) — the caller-side half of the GCR feedback loop."""
+        c = self.controller
+        if c is not None:
+            c.observe(latency)
 
     def __len__(self) -> int:
         return len(self._d)
@@ -102,9 +121,15 @@ class CNAAdmissionQueue(Generic[T]):
 class FIFOAdmissionQueue(Generic[T]):
     """Baseline discipline (MCS analogue) with the same interface."""
 
+    controller = None
+    max_active = None
+
     def __init__(self, **_: Any) -> None:
         self._q: deque[tuple[T, int]] = deque()
         self.stats = PolicyStats()
+
+    def observe_handover(self, latency) -> None:
+        """Interface parity with CNAAdmissionQueue (no controller here)."""
 
     def __len__(self) -> int:
         return len(self._q)

@@ -1,0 +1,100 @@
+"""Domain-partitioned free lists over a ``Topology``.
+
+A NUMA allocator does not keep one global free list: each socket owns a pool
+of local pages, and an allocation that cannot be satisfied locally spills to
+the *nearest* socket (Linux's zonelist fallback order).  This module is that
+structure for decode-cache slots: every slot has a fixed home domain (the
+topology's placement rule — round-robin or block, exactly how the simulator
+places threads on sockets), each domain keeps its free slots in a min-heap,
+and ``claim_nearest`` walks domains in precomputed (distance, index) order.
+
+The heaps keep every path O(log n_slots) per claim/release — the same bound
+the baseline ``SlotCache`` heap path now has — and lowest-slot-first within
+a domain keeps placement deterministic for tests.
+"""
+
+from __future__ import annotations
+
+import heapq
+
+from repro.core.topology import Topology, get_topology
+
+
+class DomainFreeLists:
+    """Per-domain slot pools with distance-ordered spill."""
+
+    def __init__(self, n_slots: int, topology: Topology, slot_domain=None) -> None:
+        self.topology = get_topology(topology)
+        self.n_slots = n_slots
+        if slot_domain is None:
+            slot_domain = [self.topology.domain_of(s) for s in range(n_slots)]
+        else:
+            slot_domain = list(slot_domain)
+            if len(slot_domain) != n_slots:
+                raise ValueError("slot_domain must have one entry per slot")
+            bad = [d for d in slot_domain if not 0 <= d < self.topology.n_domains]
+            if bad:
+                raise ValueError(f"slot_domain references unknown domains: {bad}")
+        self.slot_domain = tuple(slot_domain)
+        self._pools: list[list[int]] = [[] for _ in range(self.topology.n_domains)]
+        for slot in range(n_slots):
+            heapq.heappush(self._pools[self.slot_domain[slot]], slot)
+        self._free = n_slots
+        # Linux-zonelist-style fallback order: for each home domain, every
+        # domain sorted by (distance from home, domain index).
+        n = self.topology.n_domains
+        self.spill_order = tuple(
+            tuple(sorted(range(n), key=lambda d: (self.topology.distance(home, d), d)))
+            for home in range(n)
+        )
+
+    def __len__(self) -> int:
+        return self._free
+
+    def free_count(self, domain: int) -> int:
+        return len(self._pools[domain])
+
+    def free_slots(self) -> list[int]:
+        """All free slots, ascending (introspection/tests; not the hot path)."""
+        return sorted(s for pool in self._pools for s in pool)
+
+    def claim_in(self, domain: int) -> int | None:
+        """Pop the lowest free slot homed in ``domain`` (None if exhausted)."""
+        pool = self._pools[domain]
+        if not pool:
+            return None
+        self._free -= 1
+        return heapq.heappop(pool)
+
+    def claim_nearest(self, home: int) -> tuple[int, int] | None:
+        """Pop a free slot from the nearest non-empty domain to ``home``;
+        returns ``(slot, slot_domain)`` or None when everything is claimed."""
+        for dom in self.spill_order[home]:
+            pool = self._pools[dom]
+            if pool:
+                self._free -= 1
+                return heapq.heappop(pool), dom
+        return None
+
+    def claim_lowest(self) -> tuple[int, int] | None:
+        """Pop the globally lowest free slot (the seed baseline's rule),
+        regardless of domain; returns ``(slot, slot_domain)``."""
+        best = None
+        for dom, pool in enumerate(self._pools):
+            if pool and (best is None or pool[0] < self._pools[best][0]):
+                best = dom
+        if best is None:
+            return None
+        self._free -= 1
+        return heapq.heappop(self._pools[best]), best
+
+    def release(self, slot: int) -> int:
+        """Return ``slot`` to its home pool; returns that domain."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        dom = self.slot_domain[slot]
+        if slot in self._pools[dom]:
+            raise ValueError(f"slot {slot} is already free")
+        heapq.heappush(self._pools[dom], slot)
+        self._free += 1
+        return dom

@@ -50,6 +50,8 @@ class DecodeEngine:
         eos: int | None = None,
         domain_switch_cost: int = 4,
         topology=None,
+        placement=None,
+        slot_migration_cost: int = 2,
     ):
         self.model = model
         self.params = params
@@ -64,14 +66,28 @@ class DecodeEngine:
             )
         self.scheduler = scheduler if scheduler is not None else CNAScheduler(topology=topology)
         self.eos = eos
-        self.slots = SlotCache.zeros(model, n_slots, cache_len)
+        # placement: a repro.placement policy (name or instance) making the
+        # slot cache NUMA-homed over the scheduler's topology — each request's
+        # slot lands in (or nearest to) its KV/prefix home domain.
+        if placement is not None and self.scheduler.topology is None:
+            raise ValueError("placement needs a topology (e.g. CNAScheduler(topology=...))")
+        self.slots = SlotCache.zeros(
+            model, n_slots, cache_len,
+            topology=self.scheduler.topology if placement is not None else None,
+            policy=placement if placement is not None else "nearest_spill",
+        )
+        if self.slots.telemetry is not None:
+            self.scheduler.metrics.placement = self.slots.telemetry
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.active_req: dict[int, Request] = {}
         # simulated cost accounting: a domain switch stalls the pipe while the
         # prefix/KV home moves across DCN (the paper's remote cache miss);
         # under a hierarchical topology the stall scales with the inter-domain
-        # distance (cross-pod moves cost double a same-pod move)
+        # distance (cross-pod moves cost double a same-pod move).  A slot
+        # placed off its home domain additionally stalls per unit of distance
+        # while the prefix/KV blocks migrate to the slot's pool.
         self.domain_switch_cost = domain_switch_cost
+        self.slot_migration_cost = slot_migration_cost
         self.sim_time = 0
         self._prefill = jax.jit(model.prefill)
         self._step = jax.jit(model.decode_step)
@@ -82,12 +98,19 @@ class DecodeEngine:
         self.scheduler.submit(req, req.domain)
 
     def _admit(self):
-        while self.slots.free and len(self.scheduler):
+        while self.slots.n_free and len(self.scheduler):
             req = self.scheduler.next_request()
             if req is None:
                 break
-            self.sim_time += self.domain_switch_cost * self.scheduler.last_admit_distance
-            slot = self.slots.claim(req.rid)
+            slot = self.slots.claim(req.rid, req.domain)
+            stall = (
+                self.domain_switch_cost * self.scheduler.last_admit_distance
+                + self.slot_migration_cost * self.slots.last_distance
+            )
+            self.sim_time += stall
+            # one handover sample per admission: the GCR feedback signal for
+            # an adaptive max_active (no-op under a static/absent cap)
+            self.scheduler.observe_handover(stall)
             logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(req.prompt)[None]})
             cache["pos"] = jnp.asarray(cache["pos"], jnp.int32)
             self.slots.insert(slot, cache)

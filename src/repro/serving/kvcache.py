@@ -7,9 +7,18 @@ axis per leaf comes from the model's ``cache_logical`` tree (the position of
 the "batch" logical axis), so attention KV (B,S,kv,hd), stacked KV
 (L,B,S,kv,hd), RG-LRU state (B,W), SSD state (B,H,P,N) and encdec cross-KV
 are all handled uniformly.
+
+Slot *selection* is pluggable.  The baseline keeps one heap of free slots
+(lowest-first, O(log n) claim/release).  With a ``topology``, slots become
+NUMA-homed: ``repro.placement`` partitions them into per-domain pools, and
+``claim(owner, domain)`` places each request in (or nearest to) its KV/prefix
+home domain under the configured policy, charging distance-aware migration on
+misses and recording per-domain telemetry.
 """
 
 from __future__ import annotations
+
+import heapq
 
 import jax
 import jax.numpy as jnp
@@ -18,15 +27,55 @@ import jax.numpy as jnp
 class SlotCache:
     """cache pytree + slot bookkeeping."""
 
-    def __init__(self, cache, axes, n_slots: int):
+    def __init__(
+        self, cache, axes, n_slots: int, *, topology=None, policy="nearest_spill",
+        cost_model=None,
+    ):
         self.cache = cache
         self.axes = axes  # per-leaf batch-axis index (or None for pos)
         self.n_slots = n_slots
-        self.free = list(range(n_slots))
         self.owner: dict[int, object] = {}
+        # distance/migration cost of the most recent claim (0 for a home hit
+        # or the baseline path); the engine charges stall time from these.
+        self.last_distance = 0
+        self.last_migration_cycles = 0
+        # CostModel pricing telemetry's migration_cycles (None -> the
+        # placement layer's TWO_SOCKET default); keep it consistent with
+        # whatever model benchmarks compare those cycles against.
+        self.cost_model = cost_model
+        if topology is None:
+            self.pools = None
+            self.policy = None
+            self.telemetry = None
+            self._free = list(range(n_slots))  # a fresh range is a valid heap
+        else:
+            from repro.placement import DomainFreeLists, PlacementTelemetry, get_policy
+
+            self.pools = DomainFreeLists(n_slots, topology)
+            self.policy = get_policy(policy)
+            self.telemetry = PlacementTelemetry(n_domains=self.pools.topology.n_domains)
+            self._free = None
+
+    @property
+    def n_free(self) -> int:
+        """Free-slot count — the O(1) check for the engine's admit loop."""
+        if self.pools is not None:
+            return len(self.pools)
+        return len(self._free)
+
+    @property
+    def free(self) -> list[int]:
+        """Free slots, ascending.  NB: a *copy* under placement; treat as
+        read-only and use claim/release to mutate."""
+        if self.pools is not None:
+            return self.pools.free_slots()
+        return sorted(self._free)
 
     @classmethod
-    def zeros(cls, model, n_slots: int, cache_len: int):
+    def zeros(
+        cls, model, n_slots: int, cache_len: int, *, topology=None, policy="nearest_spill",
+        cost_model=None,
+    ):
         abs_cache = model.cache_abstract(n_slots, cache_len)
         logical = model.cache_logical(abs_cache)
         axes = jax.tree.map(
@@ -37,10 +86,23 @@ class SlotCache:
         cache = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abs_cache)
         cache["pos"] = jnp.zeros((n_slots,), jnp.int32)
         axes["pos"] = None
-        return cls(cache, axes, n_slots)
+        return cls(cache, axes, n_slots, topology=topology, policy=policy, cost_model=cost_model)
 
-    def claim(self, owner) -> int:
-        slot = self.free.pop(0)
+    def claim(self, owner, domain: int | None = None) -> int:
+        """Claim a free slot for ``owner``.  ``domain`` is the request's
+        KV/prefix home; the baseline path ignores it (lowest free slot)."""
+        if self.pools is not None:
+            p = self.policy.place(self.pools, domain if domain is not None else 0, self.cost_model)
+            if p is None:
+                raise IndexError("claim from an exhausted SlotCache")
+            self.telemetry.record_placement(p)
+            self.last_distance = p.distance
+            self.last_migration_cycles = p.migration_cycles
+            slot = p.slot
+        else:
+            slot = heapq.heappop(self._free)
+            self.last_distance = 0
+            self.last_migration_cycles = 0
         self.owner[slot] = owner
         return slot
 
@@ -50,8 +112,10 @@ class SlotCache:
         # the slot read as empty the moment it is reclaimed, so nothing can
         # attend over the previous owner's KV between claim and insert.
         self.cache["pos"] = self.cache["pos"].at[slot].set(0)
-        self.free.append(slot)
-        self.free.sort()
+        if self.pools is not None:
+            self.telemetry.record_release(self.pools.release(slot))
+        else:
+            heapq.heappush(self._free, slot)
 
     @property
     def active(self) -> list[int]:

@@ -27,11 +27,18 @@ argument against per-domain ("cohort") scheduler structures.
 
 ``max_active`` enables GCR-style concurrency restriction (admission control):
 only that many queued requests circulate in the CNA queues, the rest wait on
-a passivation list until slots of the active set drain.
+a passivation list until slots of the active set drain.  Passing an
+``repro.placement.AdaptiveController`` instead of an int turns the cap into
+the GCR feedback loop: the engine (or any driver) feeds
+``observe_handover(latency)`` after each admission and the cap tracks the
+observed handover cost — the *same* controller implementation the lock
+simulator's ``cna_rcr_adapt`` drives.
 
 ``SchedulerMetrics`` counts domain switches and per-domain service so
 benchmarks can reproduce the paper's throughput/fairness trade-off curves in
-the serving setting (benchmarks/serving_bench.py).
+the serving setting (benchmarks/serving_bench.py); ``metrics.placement``
+carries the slot-placement telemetry when the engine runs a placement-aware
+``SlotCache``.
 """
 
 from __future__ import annotations
@@ -50,6 +57,9 @@ class SchedulerMetrics:
     switch_distance: int = 0   # sum of topology distances over switches
     per_domain: dict = field(default_factory=dict)
     waits: list = field(default_factory=list)
+    # slot-placement telemetry (repro.placement.PlacementTelemetry) when the
+    # engine runs a placement-aware SlotCache; None otherwise
+    placement: object = None
 
     @property
     def locality(self) -> float:
@@ -80,6 +90,23 @@ class _BaseScheduler:
     def now(self) -> int:
         """Current scheduler tick (public: callers must not poke _clock)."""
         return self._clock
+
+    @property
+    def controller(self):
+        """The adaptive concurrency controller, or None under a static cap."""
+        return self._q.controller
+
+    @property
+    def max_active(self) -> int | None:
+        return self._q.max_active
+
+    def observe_handover(self, latency) -> None:
+        """Feed one admission-handover latency sample (domain-switch stall +
+        slot-migration cost, in engine time units) to the adaptive controller;
+        no-op without one.  Records into placement telemetry when present."""
+        self._q.observe_handover(latency)
+        if self.metrics.placement is not None:
+            self.metrics.placement.record_handover(latency)
 
     def distance_to(self, domain: int) -> int:
         """Distance of a hypothetical switch from the current domain: 0 when
@@ -132,7 +159,7 @@ class CNAScheduler(_BaseScheduler):
         shuffle_reduction: bool = False,
         seed: int = 0xC0A,
         topology: Topology | None = None,
-        max_active: int | None = None,
+        max_active=None,  # int | repro.placement.AdaptiveController | None
         rotate_after: int = 64,
     ):
         super().__init__(

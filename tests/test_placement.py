@@ -1,0 +1,334 @@
+"""repro.placement: freelists, policies, adaptive controller, telemetry —
+plus the cross-driver contract that ONE controller implementation drives both
+the lock simulator and the serving scheduler."""
+
+import random
+
+import pytest
+
+from repro.core.discipline import CNADiscipline, RestrictedDiscipline
+from repro.core.locks_sim import AdaptiveRCNASim
+from repro.core.numasim import TWO_SOCKET, Simulator
+from repro.core.topology import flat, pod
+from repro.placement import (
+    AdaptiveController,
+    DomainFreeLists,
+    PlacementTelemetry,
+    get_policy,
+)
+
+
+# -- freelists ----------------------------------------------------------------
+
+
+def test_freelists_partition_follows_topology():
+    topo = pod(2, 2)  # 4 domains, slots round-robin
+    fl = DomainFreeLists(8, topo)
+    assert fl.slot_domain == tuple(topo.domain_of(s) for s in range(8))
+    assert [fl.free_count(d) for d in range(4)] == [2, 2, 2, 2]
+    assert len(fl) == 8 and fl.free_slots() == list(range(8))
+
+
+def test_freelists_claim_in_is_lowest_first_and_exhausts():
+    fl = DomainFreeLists(8, flat(4))
+    assert fl.claim_in(1) == 1
+    assert fl.claim_in(1) == 5
+    assert fl.claim_in(1) is None
+    assert len(fl) == 6
+
+
+def test_freelists_spill_order_distance_then_index():
+    topo = pod(2, 2)  # domains {0,1} pod A, {2,3} pod B
+    fl = DomainFreeLists(4, topo)
+    assert fl.spill_order[0] == (0, 1, 2, 3)
+    assert fl.spill_order[3] == (3, 2, 0, 1)
+    # drain domain 1's pool; nearest claim for home=1 spills to sibling 0
+    assert fl.claim_in(1) == 1
+    assert fl.claim_nearest(1) == (0, 0)
+    # both pod-A domains empty: next spill crosses the pod to domain 2
+    assert fl.claim_nearest(1) == (2, 2)
+
+
+def test_freelists_release_returns_home_and_validates():
+    fl = DomainFreeLists(4, flat(2))
+    slot = fl.claim_in(0)
+    assert fl.release(slot) == 0
+    with pytest.raises(ValueError, match="already free"):
+        fl.release(slot)
+    with pytest.raises(ValueError, match="out of range"):
+        fl.release(99)
+
+
+def test_freelists_conservation_under_random_churn():
+    rng = random.Random(0)
+    topo = pod(2, 2)
+    fl = DomainFreeLists(12, topo)
+    held = []
+    for _ in range(500):
+        if held and (len(fl) == 0 or rng.random() < 0.5):
+            fl.release(held.pop(rng.randrange(len(held))))
+        else:
+            out = fl.claim_nearest(rng.randrange(4))
+            assert out is not None
+            held.append(out[0])
+        assert len(fl) + len(held) == 12
+    for s in held:
+        fl.release(s)
+    assert fl.free_slots() == list(range(12))
+
+
+def test_freelists_explicit_slot_domain_map():
+    fl = DomainFreeLists(4, flat(2), slot_domain=[0, 0, 0, 1])
+    assert [fl.free_count(d) for d in range(2)] == [3, 1]
+    with pytest.raises(ValueError, match="unknown domains"):
+        DomainFreeLists(2, flat(2), slot_domain=[0, 5])
+    with pytest.raises(ValueError, match="one entry per slot"):
+        DomainFreeLists(3, flat(2), slot_domain=[0, 1])
+
+
+# -- policies -----------------------------------------------------------------
+
+
+def test_policy_home_hit_costs_nothing():
+    fl = DomainFreeLists(8, pod(2, 2))
+    p = get_policy("nearest_spill").place(fl, 2, TWO_SOCKET)
+    assert p.slot_domain == 2 and p.local and p.distance == 0
+    assert p.migration_cycles == 0
+
+
+def test_policy_nearest_spill_prices_sibling_and_cross():
+    topo = pod(2, 2)
+    fl = DomainFreeLists(4, topo)
+    pol = get_policy("nearest_spill")
+    assert pol.place(fl, 1, TWO_SOCKET).slot == 1          # home hit
+    sib = pol.place(fl, 1, TWO_SOCKET)                      # spill to sibling 0
+    assert (sib.slot_domain, sib.distance) == (0, 1)
+    assert sib.migration_cycles == TWO_SOCKET.c_remote_xfer
+    cross = pol.place(fl, 1, TWO_SOCKET)                    # cross-pod spill
+    assert (cross.slot_domain, cross.distance) == (2, 2)
+    assert cross.migration_cycles == TWO_SOCKET.c_cross_xfer
+    assert pol.place(fl, 1, TWO_SOCKET).slot_domain == 3
+    assert pol.place(fl, 1, TWO_SOCKET) is None             # exhausted
+
+
+def test_policy_lowest_free_matches_seed_rule():
+    fl = DomainFreeLists(6, flat(3))
+    pol = get_policy("lowest_free")
+    order = [pol.place(fl, 2).slot for _ in range(6)]
+    assert order == list(range(6))  # blind lowest-slot-first, like the seed
+
+
+def test_policy_home_domain_falls_back_to_global_lowest():
+    fl = DomainFreeLists(6, flat(3))
+    pol = get_policy("home_domain")
+    assert pol.place(fl, 1).slot == 1
+    assert pol.place(fl, 1).slot == 4
+    fallback = pol.place(fl, 1)
+    assert fallback.slot == 0 and fallback.slot_domain == 0
+
+
+def test_get_policy_coercions():
+    from repro.placement import NearestSpill, PlacementPolicy
+
+    assert isinstance(get_policy("home_domain"), PlacementPolicy)
+    assert isinstance(get_policy(NearestSpill), NearestSpill)
+    ns = NearestSpill()
+    assert get_policy(ns) is ns
+    with pytest.raises(KeyError, match="unknown placement policy"):
+        get_policy("no_such_policy")
+    with pytest.raises(TypeError):
+        get_policy(3.14)
+
+
+# -- telemetry ----------------------------------------------------------------
+
+
+def test_telemetry_counters_and_locality():
+    topo = pod(2, 2)
+    fl = DomainFreeLists(4, topo)
+    tel = PlacementTelemetry(n_domains=4)
+    pol = get_policy("nearest_spill")
+    for _ in range(3):  # home hit, sibling spill, cross spill for home=1
+        tel.record_placement(pol.place(fl, 1, TWO_SOCKET))
+    assert tel.placements == 3 and tel.local_placements == 1
+    assert tel.sibling_spills == 1 and tel.cross_spills == 1 and tel.spills == 2
+    assert tel.migration_cycles == TWO_SOCKET.c_remote_xfer + TWO_SOCKET.c_cross_xfer
+    assert tel.locality == pytest.approx(1 / 3)
+    assert tel.per_domain_occupancy == {1: 1, 0: 1, 2: 1}
+    tel.record_release(0)
+    assert tel.per_domain_occupancy[0] == 0 and tel.peak_occupancy[0] == 1
+
+
+# -- adaptive controller ------------------------------------------------------
+
+
+def test_controller_grows_on_cheap_handovers():
+    c = AdaptiveController(initial=4, max_cap=10, window=8)
+    for _ in range(24):
+        c.observe(60)
+    assert c.cap == 7 and c.trajectory == [5, 6, 7]
+
+
+def test_controller_shrinks_on_stalls_and_respects_min():
+    c = AdaptiveController(initial=3, min_active=2, window=4, tolerance=0)
+    for _ in range(16):
+        c.observe(60)
+        c.observe(60)
+        c.observe(60)
+        c.observe(30_000)  # one preemption-stalled handover per window
+    assert c.cap == 2  # shrank once per window, clamped at min_active
+    assert c.stall_rate == pytest.approx(0.25)
+
+
+def test_controller_collapse_shrinks_multiplicatively():
+    c = AdaptiveController(initial=64, window=4)
+    for _ in range(4):
+        c.observe(100)
+    for _ in range(4):  # majority-stalled window -> AIMD retreat
+        c.observe(50_000)
+    assert c.cap == 48  # 64 * 0.75, not 63
+
+
+def test_controller_floor_tracks_cheapest_handover():
+    c = AdaptiveController(initial=4)
+    c.observe(500)
+    assert c.floor == 500
+    c.observe(60)
+    assert c.floor == 60
+    c.observe(30_000)  # floor only drifts up by floor_relax, never jumps
+    assert c.floor == pytest.approx(60 * 1.001)
+
+
+def test_controller_zero_latency_samples_are_cheap_not_stalls():
+    """Regression: a zero-latency handover (home-domain admission, no switch
+    — the engine's common case) must not pin the floor at 0 and turn every
+    later positive sample into a 'stall' that ratchets the cap to min."""
+    c = AdaptiveController(initial=8, max_cap=10, window=4)
+    c.observe(0)
+    for _ in range(11):  # mixed zero/cheap-switch samples, stall-free
+        c.observe(0)
+        c.observe(4)
+        c.observe(8)
+    assert c.stalls == 0
+    assert c.cap > 8  # grew on stall-free windows instead of collapsing
+    assert c.floor == pytest.approx(4, rel=0.05)  # cheapest *positive* sample
+    c2 = AdaptiveController(initial=8, window=4)
+    for _ in range(8):
+        c2.observe(0)  # all-zero trace: no baseline, nothing stalls
+    assert c2.stalls == 0 and c2.floor == 0.0
+
+
+def test_controller_ewma_gates_growth_after_collapse():
+    """A stall-free window alone is not enough to raise the cap while the
+    smoothed latency still remembers a collapse episode."""
+    c = AdaptiveController(initial=8, max_cap=16, window=4, alpha=1 / 64)
+    for _ in range(4):
+        c.observe(60)
+    for _ in range(8):
+        c.observe(30_000)  # collapse: ewma way above the stall threshold
+    cap_after_collapse = c.cap
+    for _ in range(4):  # one cheap window; ewma (slow alpha) still elevated
+        c.observe(60)
+    assert c.cap == cap_after_collapse  # growth held back by the ewma gate
+    for _ in range(256):  # sustained cheap traffic drains the average
+        c.observe(60)
+    assert c.cap > cap_after_collapse
+
+
+def test_controller_deterministic_and_validates():
+    trace = [60, 70, 30_000, 65] * 32
+    a, b = (AdaptiveController(initial=8, window=8) for _ in range(2))
+    for x in trace:
+        a.observe(x)
+        b.observe(x)
+    assert a.trajectory == b.trajectory and a.cap == b.cap
+    assert a.settled_cap() == sorted(a.trajectory[-4:])[2]
+    with pytest.raises(ValueError):
+        AdaptiveController(initial=0)
+    with pytest.raises(ValueError):
+        AdaptiveController(initial=4, min_active=0)
+
+
+def test_restricted_discipline_reads_controller_cap_live():
+    ctrl = AdaptiveController(initial=2, window=4, tolerance=0)
+    r = RestrictedDiscipline(CNADiscipline(rng=random.Random(1)), max_active=ctrl)
+    for i in range(6):
+        r.arrive(i, 0)
+    assert len(r.inner) == 2 and r.n_passive == 4
+    for _ in range(4):  # stall-free window -> controller raises the cap
+        ctrl.observe(10)
+    assert r.max_active == 3
+    g = r.release(0)  # refill loop honours the new cap
+    assert g is not None and len(r.inner) == 3
+    with pytest.raises(AttributeError, match="controller-driven"):
+        r.max_active = 5
+
+
+def test_restricted_discipline_static_setter_still_works():
+    r = RestrictedDiscipline(CNADiscipline(rng=random.Random(2)), max_active=4)
+    r.max_active = 2
+    assert r.max_active == 2
+    with pytest.raises(ValueError):
+        r.max_active = 0
+    with pytest.raises(ValueError):
+        RestrictedDiscipline(CNADiscipline(), max_active=0)
+
+
+# -- cross-driver contract ----------------------------------------------------
+
+
+def test_cap_trajectories_identical_across_sim_and_scheduler():
+    """The acceptance contract: the SAME AdaptiveController type drives both
+    the lock simulator (cna_rcr_adapt) and CNAScheduler, and an identical
+    handover trace produces an identical cap trajectory through either
+    driver's feed path."""
+    from repro.serving.scheduler import CNAScheduler
+
+    rng = random.Random(9)
+    trace = [rng.choice([60, 60, 70, 400, 10_060]) for _ in range(512)]
+
+    params = dict(initial=24, max_cap=32, window=16)
+    sim = Simulator(
+        AdaptiveRCNASim, n_threads=8, n_sockets=2,
+        lock_kwargs={"controller": AdaptiveController(**params)},
+    )
+    caps_sim = [sim.lock.observe_handover(x) or sim.lock.controller.cap for x in trace]
+
+    sched = CNAScheduler(max_active=AdaptiveController(**params))
+    caps_sched = []
+    for x in trace:
+        sched.observe_handover(x)
+        caps_sched.append(sched.controller.cap)
+
+    assert caps_sim == caps_sched
+    assert sim.lock.controller.trajectory == sched.controller.trajectory
+    assert len(set(caps_sim)) > 1  # the trace actually moved the cap
+
+
+def test_adaptive_sim_converges_under_oversubscription():
+    """End-to-end in the event loop: starting unrestricted at 4x
+    oversubscription, the controller walks the cap down to the collapse
+    boundary (~n_cores) and the run stays deterministic."""
+    kw = dict(
+        n_threads=32, n_sockets=2, seed=42, duration_cycles=3_000_000,
+        noncs_cycles=0, n_cores=8,
+    )
+
+    def run():
+        ctrl = AdaptiveController(initial=32, max_cap=32, window=16)
+        sim = Simulator(
+            AdaptiveRCNASim, lock_kwargs={"threshold": 0xFF, "controller": ctrl}, **kw
+        )
+        return sim.run(), ctrl
+
+    r1, c1 = run()
+    r2, c2 = run()
+    assert r1.ops == r2.ops and c1.trajectory == c2.trajectory  # deterministic
+    assert c1.cap <= 10  # settled near the 8-core boundary, far below 32
+    assert c1.trajectory[0] < 32  # it moved early, not at the end
+    # restriction recovered throughput: ops far above the unrestricted run
+    plain = Simulator(
+        __import__("repro.core.locks_sim", fromlist=["CNASim"]).CNASim,
+        lock_kwargs={"threshold": 0xFF}, **kw,
+    ).run()
+    assert r1.ops > 2 * plain.ops

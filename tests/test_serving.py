@@ -140,6 +140,60 @@ def test_engine_rejects_conflicting_scheduler_and_topology():
         DecodeEngine(None, None, scheduler=FS(), topology=pod(2, 2))
 
 
+def test_placement_engine_outputs_invariant_and_telemetry(small_model):
+    """A placement-aware SlotCache changes WHERE caches live, never what gets
+    decoded: outputs match the baseline engine, and per-domain telemetry is
+    surfaced through the scheduler metrics."""
+    from repro.core.topology import pod
+
+    cfg, model, params = small_model
+    base = _requests(cfg, n=10, domains=4, seed=7)
+    outs = {}
+    for name, kw in [
+        ("baseline", {}),
+        ("placed", dict(scheduler=CNAScheduler(fairness_threshold=0xF, topology=pod(2, 2)),
+                        placement="nearest_spill")),
+    ]:
+        reqs = [Request(r.rid, r.prompt, r.max_new, r.domain) for r in base]
+        eng = DecodeEngine(model, params, n_slots=4, cache_len=64, **kw)
+        eng.run(reqs)
+        outs[name] = {r.rid: tuple(r.out) for r in reqs}
+        if name == "placed":
+            tel = eng.scheduler.metrics.placement
+            assert tel is eng.slots.telemetry
+            assert tel.placements == 10 and tel.releases == 10
+            assert tel.placements == tel.local_placements + tel.spills
+            assert tel.handover_samples == 10  # one sample per admission
+            assert sum(tel.per_domain_occupancy.values()) == 0  # all released
+    assert outs["placed"] == outs["baseline"]
+
+
+def test_placement_requires_topology():
+    with pytest.raises(ValueError, match="placement needs a topology"):
+        DecodeEngine(None, None, placement="nearest_spill")
+
+
+def test_adaptive_scheduler_in_engine_feeds_controller(small_model):
+    """CNAScheduler(max_active=AdaptiveController) in a real engine run: the
+    engine feeds one handover sample per admission and decode output is
+    unchanged by the adaptive cap."""
+    from repro.core.topology import pod
+    from repro.placement import AdaptiveController
+
+    cfg, model, params = small_model
+    base = _requests(cfg, n=8, domains=4, seed=8)
+    ctrl = AdaptiveController(initial=2, max_cap=8, window=4)
+    sched = CNAScheduler(fairness_threshold=0xF, topology=pod(2, 2), max_active=ctrl)
+    reqs = [Request(r.rid, r.prompt, r.max_new, r.domain) for r in base]
+    eng = DecodeEngine(model, params, n_slots=2, cache_len=64, scheduler=sched)
+    eng.run(reqs)
+    assert all(r.done for r in reqs)
+    assert sched.controller is ctrl and ctrl.samples == 8
+    for r in reqs:
+        ref = _greedy_reference(model, params, r.prompt, r.max_new)
+        assert r.out[: r.max_new] == ref
+
+
 def test_topology_scheduler_scales_switch_cost(small_model):
     """Cross-pod admissions stall the engine twice as long as same-pod ones
     under a hierarchical topology."""
