@@ -29,6 +29,26 @@ def smoke(full, tiny):
     return tiny if SMOKE else full
 
 
+def zipf_draws(n: int, n_items: int, skew: float, rng) -> list[int]:
+    """n inverse-CDF draws over items weighted 1/(k+1)^skew (skew 0 =
+    uniform).  The one Zipf sampler for every bench workload — domain mixes
+    and shared-prefix pools must skew identically to be comparable."""
+    weights = [1.0 / (k + 1) ** skew for k in range(n_items)]
+    tot = sum(weights)
+    out = []
+    for _ in range(n):
+        r = rng.random() * tot
+        acc = 0.0
+        for k, w in enumerate(weights):
+            acc += w
+            if r <= acc:
+                out.append(k)
+                break
+        else:
+            out.append(n_items - 1)
+    return out
+
+
 def claim(name: str, ok: bool, detail: str = ""):
     status = "PASS" if ok else "FAIL"
     if not ok:

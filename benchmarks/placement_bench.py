@@ -38,23 +38,10 @@ SEED = 7
 
 
 def _zipf_domains(n, n_domains, skew, rng):
-    """Zipf-weighted home domains: domain k drawn with weight 1/(k+1)^skew.
+    """Zipf-weighted home domains (shared ``common.zipf_draws`` sampler).
     Skew is what makes placement interesting — a hot domain's pool exhausts
     and the policy must decide where the overflow lands."""
-    weights = [1.0 / (k + 1) ** skew for k in range(n_domains)]
-    tot = sum(weights)
-    out = []
-    for _ in range(n):
-        r = rng.random() * tot
-        acc = 0.0
-        for k, w in enumerate(weights):
-            acc += w
-            if r <= acc:
-                out.append(k)
-                break
-        else:
-            out.append(n_domains - 1)
-    return out
+    return common.zipf_draws(n, n_domains, skew, rng)
 
 
 def _alloc_loop(policy_name, homes, *, topo, n_slots, seed):

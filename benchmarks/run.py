@@ -3,8 +3,11 @@ benches (serving scheduler, slot placement, collective schedules, roofline).
 
     PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
-Sections: paper, locks, restriction, placement, serving, collectives, moe_ep,
-roofline.  Default: all.
+Sections: paper, locks, restriction, placement, serving, serving_prefix,
+collectives, moe_ep, roofline.  Default: all.  ``serving_prefix`` is the
+jax-free shared-prefix slice of the serving section (prefix-index
+build/lookup/re-home) so the dependency-light smoke lane can cover it;
+``serving`` already includes it.
 
 ``--smoke`` shrinks every iteration knob (see benchmarks.common.smoke) so CI
 can exercise each benchmark's code path in seconds; claims still print but do
@@ -75,6 +78,10 @@ def main() -> int:
         from . import serving_bench
 
         serving_bench.run_all()
+    elif "serving_prefix" in sections:
+        from . import serving_bench
+
+        serving_bench.shared_prefix()
     if "collectives" in sections:
         from . import collectives_bench
 

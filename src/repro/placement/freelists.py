@@ -8,9 +8,11 @@ topology's placement rule — round-robin or block, exactly how the simulator
 places threads on sockets), each domain keeps its free slots in a min-heap,
 and ``claim_nearest`` walks domains in precomputed (distance, index) order.
 
-The heaps keep every path O(log n_slots) per claim/release — the same bound
-the baseline ``SlotCache`` heap path now has — and lowest-slot-first within
-a domain keeps placement deterministic for tests.
+The heaps keep claims O(log n_slots); release is a heap push plus an O(1)
+double-free check against a free-slot *set* kept alongside the heaps (an
+earlier version scanned the home pool's heap list for membership, an O(n)
+walk that contradicted this bound).  Lowest-slot-first within a domain keeps
+placement deterministic for tests.
 """
 
 from __future__ import annotations
@@ -39,7 +41,9 @@ class DomainFreeLists:
         self._pools: list[list[int]] = [[] for _ in range(self.topology.n_domains)]
         for slot in range(n_slots):
             heapq.heappush(self._pools[self.slot_domain[slot]], slot)
-        self._free = n_slots
+        # mirror of the heaps' contents: O(1) membership for the release-path
+        # double-free check (and the free count)
+        self._free_set: set[int] = set(range(n_slots))
         # Linux-zonelist-style fallback order: for each home domain, every
         # domain sorted by (distance from home, domain index).
         n = self.topology.n_domains
@@ -49,31 +53,32 @@ class DomainFreeLists:
         )
 
     def __len__(self) -> int:
-        return self._free
+        return len(self._free_set)
 
     def free_count(self, domain: int) -> int:
         return len(self._pools[domain])
 
     def free_slots(self) -> list[int]:
         """All free slots, ascending (introspection/tests; not the hot path)."""
-        return sorted(s for pool in self._pools for s in pool)
+        return sorted(self._free_set)
+
+    def _pop(self, domain: int) -> int:
+        slot = heapq.heappop(self._pools[domain])
+        self._free_set.discard(slot)
+        return slot
 
     def claim_in(self, domain: int) -> int | None:
         """Pop the lowest free slot homed in ``domain`` (None if exhausted)."""
-        pool = self._pools[domain]
-        if not pool:
+        if not self._pools[domain]:
             return None
-        self._free -= 1
-        return heapq.heappop(pool)
+        return self._pop(domain)
 
     def claim_nearest(self, home: int) -> tuple[int, int] | None:
         """Pop a free slot from the nearest non-empty domain to ``home``;
         returns ``(slot, slot_domain)`` or None when everything is claimed."""
         for dom in self.spill_order[home]:
-            pool = self._pools[dom]
-            if pool:
-                self._free -= 1
-                return heapq.heappop(pool), dom
+            if self._pools[dom]:
+                return self._pop(dom), dom
         return None
 
     def claim_lowest(self) -> tuple[int, int] | None:
@@ -85,16 +90,16 @@ class DomainFreeLists:
                 best = dom
         if best is None:
             return None
-        self._free -= 1
-        return heapq.heappop(self._pools[best]), best
+        return self._pop(best), best
 
     def release(self, slot: int) -> int:
-        """Return ``slot`` to its home pool; returns that domain."""
+        """Return ``slot`` to its home pool; returns that domain.  The
+        double-free check is O(1) against the free set, not a pool scan."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"slot {slot} out of range")
-        dom = self.slot_domain[slot]
-        if slot in self._pools[dom]:
+        if slot in self._free_set:
             raise ValueError(f"slot {slot} is already free")
+        dom = self.slot_domain[slot]
         heapq.heappush(self._pools[dom], slot)
-        self._free += 1
+        self._free_set.add(slot)
         return dom

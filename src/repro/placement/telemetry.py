@@ -23,6 +23,11 @@ class PlacementTelemetry:
     releases: int = 0
     handover_samples: int = 0
     handover_cycles: int = 0
+    # prefix-index coupling: how often homes were derived (vs caller-given)
+    # and what fraction of prompt tokens the index had cached
+    derived_homes: int = 0
+    prefix_hit_tokens: int = 0
+    prefix_lookup_tokens: int = 0
     per_domain_placements: dict = field(default_factory=dict)
     per_domain_occupancy: dict = field(default_factory=dict)  # live claims
     peak_occupancy: dict = field(default_factory=dict)
@@ -61,6 +66,16 @@ class PlacementTelemetry:
     def record_handover(self, latency) -> None:
         self.handover_samples += 1
         self.handover_cycles += int(latency)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of derived-home prompt tokens the index had cached."""
+        return self.prefix_hit_tokens / max(1, self.prefix_lookup_tokens)
+
+    def record_derived_home(self, matched_len: int, prompt_len: int) -> None:
+        self.derived_homes += 1
+        self.prefix_hit_tokens += matched_len
+        self.prefix_lookup_tokens += prompt_len
 
     def fairness_factor(self) -> float:
         """Top-half share of placements across domains (same convention as

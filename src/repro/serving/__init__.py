@@ -1,2 +1,3 @@
 from .engine import DecodeEngine, Request  # noqa: F401
+from .prefixindex import PrefixIndex  # noqa: F401
 from .scheduler import CNAScheduler, FIFOScheduler, SchedulerMetrics  # noqa: F401

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .kvcache import SlotCache
+from .prefixindex import PrefixIndex
 from .scheduler import CNAScheduler
 
 
@@ -28,10 +29,17 @@ class Request:
     rid: int
     prompt: np.ndarray            # (P,) int32
     max_new: int
-    domain: int = 0               # pod-locality domain of the prefix/KV home
+    # pod-locality domain of the prefix/KV home.  ``None`` asks the engine to
+    # derive it from the prefix index at submit (production traffic has no
+    # oracle); an explicit int remains an override.
+    domain: int | None = 0
     out: list = field(default_factory=list)
     submit_t: int = 0
     finish_t: int = -1
+    # prompt tokens whose KV is already cached in the home domain (set by
+    # prefix-index derivation); discounts the migration stall at admission —
+    # only the uncached suffix of the KV moves.
+    matched_len: int = 0
 
     @property
     def done(self) -> bool:
@@ -52,6 +60,7 @@ class DecodeEngine:
         topology=None,
         placement=None,
         slot_migration_cost: int = 2,
+        prefix_index=None,
     ):
         self.model = model
         self.params = params
@@ -78,6 +87,33 @@ class DecodeEngine:
         )
         if self.slots.telemetry is not None:
             self.scheduler.metrics.placement = self.slots.telemetry
+        # prefix_index: a repro.serving.PrefixIndex (or True for a default
+        # one) deriving req.domain from the longest cached prefix when a
+        # caller submits domain=None.  It learns from actual placements, so
+        # it needs the placement-aware slot cache to feed it.
+        if prefix_index is True:
+            prefix_index = PrefixIndex()
+        if prefix_index is not None and placement is None:
+            raise ValueError(
+                "a prefix index needs placement=... — derived homes are "
+                "learned from where the slot cache actually puts each prefix"
+            )
+        self.prefix_index = prefix_index
+        if prefix_index is not None:
+            n_domains = self.scheduler.topology.n_domains
+            if prefix_index.n_domains is None:
+                prefix_index.n_domains = n_domains
+            elif prefix_index.n_domains != n_domains:
+                raise ValueError(
+                    f"prefix index spans {prefix_index.n_domains} domains but "
+                    f"the topology has {n_domains}"
+                )
+            # bind occupancy to THIS engine's live telemetry unconditionally:
+            # a warm index handed over from a retired engine must not keep
+            # reading (or keeping alive, via the closure) the old engine's
+            # frozen counters
+            telemetry = self.slots.telemetry
+            prefix_index.occupancy = lambda: telemetry.per_domain_occupancy
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.active_req: dict[int, Request] = {}
         # simulated cost accounting: a domain switch stalls the pipe while the
@@ -94,6 +130,30 @@ class DecodeEngine:
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request):
+        """Queue ``req`` for admission.  Prompts that cannot fit the cache are
+        rejected here — prefill would return ``pos > cache_len``, ``_fit``
+        would silently trim the KV, and the decode write would clamp onto the
+        last cache entry, corrupting it.  ``domain=None`` derives the home
+        from the prefix index (longest cached prefix; explicit domains remain
+        an override)."""
+        if len(req.prompt) >= self.cache_len:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens cannot fit cache_len="
+                f"{self.cache_len} (need len(prompt) < cache_len to leave "
+                "room for decode); truncate the prompt or grow the cache"
+            )
+        if req.domain is None:
+            if self.prefix_index is not None:
+                domain, matched = self.prefix_index.home(req.prompt)
+                req.matched_len = matched
+                if self.slots.telemetry is not None:
+                    self.slots.telemetry.record_derived_home(matched, len(req.prompt))
+            else:
+                domain = None
+            # a cold index (or no index at all) has no opinion: domain 0 is
+            # the engine's only defensible default, and it is explicit here
+            # rather than coerced deep inside SlotCache.claim
+            req.domain = 0 if domain is None else domain
         req.submit_t = self.scheduler.now
         self.scheduler.submit(req, req.domain)
 
@@ -103,11 +163,22 @@ class DecodeEngine:
             if req is None:
                 break
             slot = self.slots.claim(req.rid, req.domain)
-            stall = (
-                self.domain_switch_cost * self.scheduler.last_admit_distance
-                + self.slot_migration_cost * self.slots.last_distance
-            )
+            migration = self.slot_migration_cost * self.slots.last_distance
+            if req.matched_len and len(req.prompt):
+                # only the uncached suffix of the KV is charged for an
+                # off-home placement.  Modeling assumption (the index's
+                # multi-holder records make it concrete): a prefix hot enough
+                # to match is replicated into every pool that recently served
+                # it, so the matched run is treated as already resident where
+                # the slot lands and only the per-request suffix moves.
+                uncached = max(0, len(req.prompt) - req.matched_len)
+                migration = migration * uncached // len(req.prompt)
+            stall = self.domain_switch_cost * self.scheduler.last_admit_distance + migration
             self.sim_time += stall
+            if self.prefix_index is not None and self.slots.last_domain is not None:
+                # re-home: the prefix now lives wherever placement actually
+                # put it, which is where the next match should send traffic
+                self.prefix_index.record(req.prompt, self.slots.last_domain)
             # one handover sample per admission: the GCR feedback signal for
             # an adaptive max_active (no-op under a static/absent cap)
             self.scheduler.observe_handover(stall)
@@ -139,6 +210,16 @@ class DecodeEngine:
             past_len = int(self.slots.cache["pos"][slot]) >= self.cache_len - 1
             if req.done or hit_eos or past_len:
                 req.finish_t = self.scheduler.now
+                if self.prefix_index is not None:
+                    # the retiring slot's pool now holds KV for the full
+                    # sequence — index it before release so follow-ups that
+                    # extend this conversation home to the same pool
+                    dom = self.slots.slot_domain(slot)
+                    if dom is not None:
+                        self.prefix_index.record(
+                            np.concatenate([np.asarray(req.prompt), np.asarray(req.out)]),
+                            dom,
+                        )
                 self.slots.release(slot)
                 del self.active_req[slot]
 

@@ -37,8 +37,11 @@ class SlotCache:
         self.owner: dict[int, object] = {}
         # distance/migration cost of the most recent claim (0 for a home hit
         # or the baseline path); the engine charges stall time from these.
+        # ``last_domain`` is where the slot actually landed (None on the
+        # baseline path) — the prefix index re-homes hot prefixes from it.
         self.last_distance = 0
         self.last_migration_cycles = 0
+        self.last_domain = None
         # CostModel pricing telemetry's migration_cycles (None -> the
         # placement layer's TWO_SOCKET default); keep it consistent with
         # whatever model benchmarks compare those cycles against.
@@ -90,19 +93,39 @@ class SlotCache:
 
     def claim(self, owner, domain: int | None = None) -> int:
         """Claim a free slot for ``owner``.  ``domain`` is the request's
-        KV/prefix home; the baseline path ignores it (lowest free slot)."""
+        KV/prefix home; the baseline path ignores it (lowest free slot).
+        Under placement the domain is required and range-checked up front —
+        the same validation ``_BaseScheduler.submit`` applies — so a bad home
+        cannot masquerade as domain-0 traffic in the telemetry or surface as
+        an opaque IndexError inside the pools."""
         if self.pools is not None:
-            p = self.policy.place(self.pools, domain if domain is not None else 0, self.cost_model)
+            topo = self.pools.topology
+            if domain is None:
+                raise ValueError(
+                    "claim under placement needs the request's KV/prefix home "
+                    "domain (got domain=None); derive one (PrefixIndex.home) "
+                    "or pass it explicitly"
+                )
+            if not 0 <= domain < topo.n_domains:
+                raise ValueError(
+                    f"domain {domain} out of range for topology "
+                    f"{topo.name!r} ({topo.n_domains} domains)"
+                )
+            p = self.policy.place(self.pools, domain, self.cost_model)
             if p is None:
                 raise IndexError("claim from an exhausted SlotCache")
             self.telemetry.record_placement(p)
             self.last_distance = p.distance
             self.last_migration_cycles = p.migration_cycles
+            self.last_domain = p.slot_domain
             slot = p.slot
         else:
+            if not self._free:
+                raise IndexError("claim from an exhausted SlotCache")
             slot = heapq.heappop(self._free)
             self.last_distance = 0
             self.last_migration_cycles = 0
+            self.last_domain = None
         self.owner[slot] = owner
         return slot
 
@@ -120,6 +143,15 @@ class SlotCache:
     @property
     def active(self) -> list[int]:
         return sorted(self.owner)
+
+    def slot_domain(self, slot: int) -> int | None:
+        """Home domain of ``slot``'s pool (None on the baseline path) — the
+        domain whose free list holds the KV written into this slot."""
+        if self.pools is None:
+            return None
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+        return self.pools.slot_domain[slot]
 
     def insert(self, slot: int, single_cache):
         """Insert a (batch=1) prefill cache into ``slot``."""

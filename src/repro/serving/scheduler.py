@@ -9,7 +9,10 @@ This is the paper's algorithm carried verbatim into the serving runtime via
   lock                       | a free decode slot (the serialised resource)
   thread                     | a queued request
   NUMA socket of a thread    | the locality domain of the request — the pod
-                             | holding its prefix/KV-cache home
+                             | holding its prefix/KV-cache home (caller-given,
+                             | or derived from the longest cached prefix by
+                             | ``repro.serving.prefixindex`` when a request
+                             | is submitted with ``domain=None``)
   socket of the lock holder  | the engine's *current* domain (domain of the
                              | most recently admitted request)
   main queue                 | CNA main queue (arrivals always join it)

@@ -6,6 +6,11 @@ import random
 
 import pytest
 
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
 from repro.core.discipline import CNADiscipline, RestrictedDiscipline
 from repro.core.locks_sim import AdaptiveRCNASim
 from repro.core.numasim import TWO_SOCKET, Simulator
@@ -84,6 +89,71 @@ def test_freelists_explicit_slot_domain_map():
         DomainFreeLists(2, flat(2), slot_domain=[0, 5])
     with pytest.raises(ValueError, match="one entry per slot"):
         DomainFreeLists(3, flat(2), slot_domain=[0, 1])
+
+
+def test_freelists_double_release_is_o1_against_free_set():
+    """Regression for the release-path complexity fix: the double-free check
+    now reads an O(1) set mirror of the pools (``_free_set`` — absent on the
+    old code, which scanned the home pool's heap list), and double-release
+    still raises after arbitrary churn."""
+    topo = pod(2, 2)
+    fl = DomainFreeLists(64, topo)
+    held = [fl.claim_nearest(i % 4)[0] for i in range(40)]
+    assert fl._free_set == set(fl.free_slots()) and len(fl) == 24
+    s = held.pop()
+    assert s not in fl._free_set
+    fl.release(s)
+    assert s in fl._free_set
+    with pytest.raises(ValueError, match="already free"):
+        fl.release(s)
+    for s in held:
+        fl.release(s)
+    assert fl.free_slots() == list(range(64)) and fl._free_set == set(range(64))
+
+
+# -- freelists property tests --------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_pods=st.integers(1, 3), spp=st.integers(1, 3),
+       n_slots=st.integers(1, 24), seed=st.integers(0, 10_000))
+def test_prop_freelists_invariants_under_churn(n_pods, spp, n_slots, seed):
+    """claim/release round-trips preserve len, no slot ever appears in two
+    pools (or twice in one), the free set mirrors the heaps exactly, and
+    every pooled slot sits in its home domain's pool."""
+    topo = pod(n_pods, spp)
+    fl = DomainFreeLists(n_slots, topo)
+    rng = random.Random(seed)
+    held = []
+    for _ in range(3 * n_slots):
+        if held and (len(fl) == 0 or rng.random() < 0.5):
+            fl.release(held.pop(rng.randrange(len(held))))
+        else:
+            held.append(fl.claim_nearest(rng.randrange(topo.n_domains))[0])
+        pooled = [s for pool in fl._pools for s in pool]
+        assert len(pooled) == len(set(pooled)) == len(fl)
+        assert set(pooled) == fl._free_set
+        assert len(fl) + len(held) == n_slots
+        assert not fl._free_set & set(held)
+        for dom, pool in enumerate(fl._pools):
+            assert all(fl.slot_domain[s] == dom for s in pool)
+    for s in held:
+        fl.release(s)
+    assert fl.free_slots() == list(range(n_slots))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_pods=st.integers(1, 4), spp=st.integers(1, 4))
+def test_prop_spill_order_is_distance_sorted(n_pods, spp):
+    """Every home's spill order is a permutation of the domains, starts at
+    home, has non-decreasing distance, and breaks distance ties by index."""
+    topo = pod(n_pods, spp)
+    fl = DomainFreeLists(topo.n_domains, topo)
+    for home, order in enumerate(fl.spill_order):
+        assert sorted(order) == list(range(topo.n_domains))
+        assert order[0] == home
+        keys = [(topo.distance(home, d), d) for d in order]
+        assert keys == sorted(keys)
 
 
 # -- policies -----------------------------------------------------------------
@@ -233,6 +303,37 @@ def test_controller_ewma_gates_growth_after_collapse():
     for _ in range(256):  # sustained cheap traffic drains the average
         c.observe(60)
     assert c.cap > cap_after_collapse
+
+
+@settings(max_examples=25, deadline=None)
+@given(initial=st.integers(1, 32), window=st.integers(1, 16),
+       n=st.integers(1, 200))
+def test_prop_controller_all_zero_stream_never_shrinks(initial, window, n):
+    """Floor edge case: an all-zero-latency stream (every admission a
+    home-domain hit) establishes no positive baseline, classifies nothing as
+    a stall, and must never shrink the cap below its starting point."""
+    c = AdaptiveController(initial=initial, window=window)
+    for _ in range(n):
+        c.observe(0)
+        assert c.cap >= initial
+    assert c.stalls == 0 and c.floor == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(f=st.floats(1e-3, 1e6), x=st.floats(0.0, 1e9))
+def test_prop_floor_relaxation_cannot_cross_stall_threshold(f, x):
+    """Floor edge case: one sample relaxes the floor by at most floor_relax
+    (1.001x), which can never carry it across the stall threshold
+    (stall_factor * floor) from below — so the classifier's baseline cannot
+    jump past its own cutoff in a single step, whatever arrives."""
+    c = AdaptiveController(initial=4)
+    c.observe(f)
+    assert c.floor == pytest.approx(f)
+    threshold = c.stall_factor * c.floor + c.deadband
+    c.observe(x)
+    assert c.floor <= f * c.floor_relax * (1 + 1e-12)
+    assert c.floor < threshold
+    assert not c.is_stall(c.floor)
 
 
 def test_controller_deterministic_and_validates():

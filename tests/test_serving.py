@@ -173,6 +173,55 @@ def test_placement_requires_topology():
         DecodeEngine(None, None, placement="nearest_spill")
 
 
+def test_engine_rejects_overlength_prompt(small_model):
+    """Regression: a prompt with len(prompt) >= cache_len used to be admitted
+    unguarded — prefill returned pos > cache_len, ``_fit`` silently trimmed
+    the KV, and the decode write clamped onto the last cache entry.  It must
+    be rejected at submit; the longest fitting prompt still decodes."""
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=1, cache_len=16)
+    bad = Request(rid=0, prompt=np.arange(16, dtype=np.int32) % cfg.vocab, max_new=2)
+    with pytest.raises(ValueError, match="cannot fit cache_len"):
+        eng.submit(bad)
+    assert len(eng.scheduler) == 0  # nothing half-queued
+    ok = Request(rid=1, prompt=np.arange(15, dtype=np.int32) % cfg.vocab, max_new=2)
+    eng.run([ok])
+    assert ok.done
+
+
+def test_slotcache_claim_validates_domain_and_exhaustion():
+    """Regression: under placement, claim() used to coerce domain=None to 0
+    (skewing domain-0 telemetry) and let out-of-range domains surface as an
+    opaque IndexError inside the pools; the baseline path's exhausted-cache
+    error was heapq's bare 'index out of range'."""
+    import jax.numpy as jnp
+
+    from repro.core.topology import pod
+    from repro.serving.kvcache import SlotCache
+
+    def mk(**kw):
+        return SlotCache({"pos": jnp.zeros((2,), jnp.int32)}, {"pos": None}, 2, **kw)
+
+    sc = mk(topology=pod(2, 1))
+    with pytest.raises(ValueError, match="domain=None"):
+        sc.claim("r0")
+    with pytest.raises(ValueError, match="domain 5 out of range"):
+        sc.claim("r0", 5)
+    with pytest.raises(ValueError, match="domain -1 out of range"):
+        sc.claim("r0", -1)
+    assert sc.telemetry.placements == 0 and not sc.owner  # rejects left no trace
+    assert sc.claim("r0", 1) is not None and sc.slot_domain(0) == 0
+    sc.claim("r1", 1)
+    with pytest.raises(IndexError, match="claim from an exhausted SlotCache"):
+        sc.claim("r2", 1)
+
+    base = mk()
+    base.claim("a"), base.claim("b")
+    assert base.slot_domain(0) is None  # baseline: no domains
+    with pytest.raises(IndexError, match="claim from an exhausted SlotCache"):
+        base.claim("c")
+
+
 def test_adaptive_scheduler_in_engine_feeds_controller(small_model):
     """CNAScheduler(max_active=AdaptiveController) in a real engine run: the
     engine feeds one handover sample per admission and decode output is
