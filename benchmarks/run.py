@@ -4,10 +4,11 @@ benches (serving scheduler, slot placement, collective schedules, roofline).
     PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
 Sections: paper, locks, restriction, placement, serving, serving_prefix,
-collectives, moe_ep, roofline.  Default: all.  ``serving_prefix`` is the
-jax-free shared-prefix slice of the serving section (prefix-index
+router, collectives, moe_ep, roofline.  Default: all.  ``serving_prefix`` is
+the jax-free shared-prefix slice of the serving section (prefix-index
 build/lookup/re-home) so the dependency-light smoke lane can cover it;
-``serving`` already includes it.
+``serving`` already includes it.  ``router`` (fleet routing on the jax-free
+discrete-event simulator) is smoke-lane-safe as well.
 
 ``--smoke`` shrinks every iteration knob (see benchmarks.common.smoke) so CI
 can exercise each benchmark's code path in seconds; claims still print but do
@@ -56,8 +57,8 @@ def main() -> int:
         args.remove("--smoke")
         common.SMOKE = True
     sections = args or [
-        "paper", "locks", "restriction", "placement", "serving", "collectives",
-        "moe_ep", "roofline",
+        "paper", "locks", "restriction", "placement", "serving", "router",
+        "collectives", "moe_ep", "roofline",
     ]
     t0 = time.time()
     if "paper" in sections:
@@ -82,6 +83,10 @@ def main() -> int:
         from . import serving_bench
 
         serving_bench.shared_prefix()
+    if "router" in sections:
+        from . import router_bench
+
+        router_bench.run_all()
     if "collectives" in sections:
         from . import collectives_bench
 

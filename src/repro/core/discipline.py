@@ -317,6 +317,41 @@ class CNADiscipline:
         return out
 
 
+class FIFODiscipline:
+    """Strict arrival order over one deque — the MCS baseline behind the FIFO
+    admission queue, with the same ``arrive``/``release``/``drain`` interface
+    as ``CNADiscipline`` so ``RestrictedDiscipline`` can wrap either core
+    (GCR restriction is orthogonal to the grant order)."""
+
+    def __init__(self) -> None:
+        self._q: deque[tuple[Any, int]] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __iter__(self) -> Iterator[tuple[Any, int]]:
+        yield from self._q
+
+    @property
+    def n_secondary(self) -> int:
+        return 0
+
+    def arrive(self, item: Any, domain: int) -> tuple:
+        self._q.append((item, domain))
+        return ()
+
+    def release(self, holder_domain: int) -> Grant | None:
+        if not self._q:
+            return None
+        item, dom = self._q.popleft()
+        return Grant(item, dom, local=dom == holder_domain, kind="fifo")
+
+    def drain(self) -> list[tuple[Any, int]]:
+        out = list(self._q)
+        self._q.clear()
+        return out
+
+
 class RestrictedDiscipline:
     """GCR-style concurrency restriction over any discipline core.
 

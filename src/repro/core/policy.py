@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import random
 from dataclasses import dataclass
-from collections import deque
 from typing import Any, Generic, Iterable, TypeVar
 
 from .discipline import (
@@ -34,6 +33,7 @@ from .discipline import (
     THRESHOLD2,
     CNADiscipline,
     DisciplineStats,
+    FIFODiscipline,
     RestrictedDiscipline,
 )
 
@@ -119,38 +119,59 @@ class CNAAdmissionQueue(Generic[T]):
 
 
 class FIFOAdmissionQueue(Generic[T]):
-    """Baseline discipline (MCS analogue) with the same interface."""
+    """Baseline discipline (MCS analogue) with the same interface.
 
-    controller = None
-    max_active = None
+    Accepts the restriction knobs ``CNAAdmissionQueue`` does — and honours
+    them (``RestrictedDiscipline`` over the FIFO core: restriction bounds the
+    *active set*, which is orthogonal to grant order) — so baseline arms of a
+    benchmark can run under the same admission control as the CNA arm.  It
+    deliberately does not accept anything else: a misspelled or inapplicable
+    kwarg (``fairness_threshold`` has no FIFO analogue) is a TypeError, not a
+    silently different experiment."""
 
-    def __init__(self, **_: Any) -> None:
-        self._q: deque[tuple[T, int]] = deque()
+    def __init__(
+        self,
+        *,
+        max_active: "int | Any | None" = None,
+        rotate_after: int = 64,
+    ) -> None:
+        self._d: "FIFODiscipline | RestrictedDiscipline" = FIFODiscipline()
+        if max_active is not None:
+            self._d = RestrictedDiscipline(self._d, max_active=max_active, rotate_after=rotate_after)
         self.stats = PolicyStats()
 
+    @property
+    def controller(self):
+        """The adaptive-cap controller, or None under a static/absent cap."""
+        return getattr(self._d, "controller", None)
+
+    @property
+    def max_active(self) -> int | None:
+        return getattr(self._d, "max_active", None)
+
     def observe_handover(self, latency) -> None:
-        """Interface parity with CNAAdmissionQueue (no controller here)."""
+        """Feed one handover-latency sample to the adaptive controller (no-op
+        without one) — interface parity with CNAAdmissionQueue."""
+        c = self.controller
+        if c is not None:
+            c.observe(latency)
 
     def __len__(self) -> int:
-        return len(self._q)
+        return len(self._d)
 
     def push(self, value: T, domain: int) -> None:
-        self._q.append((value, domain))
+        self.stats.consume(None, self._d.arrive(value, domain))
 
     def extend(self, values: Iterable[tuple[T, int]]) -> None:
         for v, d in values:
             self.push(v, d)
 
     def pop(self, current_domain: int) -> tuple[T, int] | None:
-        if not self._q:
+        g = self._d.release(current_domain)
+        if g is None:
             return None
-        value, domain = self._q.popleft()
-        self.stats.grants += 1
-        if domain == current_domain:
-            self.stats.local_grants += 1
-        return value, domain
+        self.stats.consume(g)
+        return g.item, g.domain
 
     def drain(self) -> list[tuple[T, int]]:
-        out = list(self._q)
-        self._q.clear()
-        return out
+        return self._d.drain()

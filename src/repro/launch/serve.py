@@ -8,7 +8,11 @@ is visible on a real (reduced-config) model.  ``--derived-homes`` drops the
 caller-supplied domain oracle: requests submit with ``domain=None`` and the
 engine derives homes from the prefix index over a NUMA-placed slot cache
 (pod topology over ``--domains``), with shared prompt prefixes so the index
-has something to match.
+has something to match.  ``--replicas N`` runs the router tier instead: N
+engine replicas behind ``repro.router.ReplicaRouter`` — federated prefix
+summaries steer each session to the replica already holding its prefix, and
+per-engine ``PrefixKVStore`` reuse turns the steering into skipped prefill
+positions (printed per replica).
 """
 
 from __future__ import annotations
@@ -41,7 +45,15 @@ def main(argv=None) -> int:
     ap.add_argument("--derived-homes", action="store_true",
                     help="submit domain=None and derive homes from the prefix "
                          "index over a placement-aware slot cache")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="front N engine replicas with the federated router "
+                         "tier (repro.router) instead of a single engine")
+    ap.add_argument("--sync-every", type=int, default=4,
+                    help="router ticks between federation summary syncs")
     args = ap.parse_args(argv)
+
+    if args.replicas > 1:
+        return serve_fleet(args)
 
     arch = args.arch.replace("-", "_").replace(".", "")
     cfg = get_reduced_config(arch)
@@ -106,6 +118,71 @@ def main(argv=None) -> int:
               f"locality={m.locality:.2f} switches={m.domain_switches} "
               f"fairness={m.fairness_factor():.3f} wall={wall:.1f}s "
               f"tok_per_simtick={tokens / max(1, eng.sim_time):.2f}{extra}")
+    return 0
+
+
+def serve_fleet(args) -> int:
+    """The --replicas demo: N reduced-config engines behind the router."""
+    from repro.core.topology import pod
+    from repro.router import EngineReplica, ReplicaRouter, Session
+    from repro.serving.scheduler import CNAScheduler
+
+    arch = args.arch.replace("-", "_").replace(".", "")
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    n_shared = max(2, args.prompt_len // 2)
+    shared = [rng.integers(0, cfg.vocab, n_shared).astype(np.int32)
+              for _ in range(max(2, args.replicas))]
+    sessions = [
+        Session(sid=i,
+                prompt=tuple(int(t) for t in np.concatenate([
+                    shared[int(rng.integers(0, len(shared)))],
+                    rng.integers(0, cfg.vocab, args.prompt_len - n_shared).astype(np.int32),
+                ])),
+                decode_len=args.max_new)
+        for i in range(args.requests)
+    ]
+    replicas = [
+        EngineReplica(r, DecodeEngine(
+            model, params, n_slots=args.slots, cache_len=args.cache_len,
+            scheduler=CNAScheduler(fairness_threshold=args.fairness_threshold,
+                                   topology=pod(1, args.domains)),
+            placement="nearest_spill", prefix_index=True, prefix_kv=True,
+            domain_switch_cost=args.switch_cost,
+        ))
+        for r in range(args.replicas)
+    ]
+    router = ReplicaRouter(replicas, sync_every=args.sync_every)
+
+    t0 = time.time()
+    i = done = 0
+    while done < len(sessions):
+        router.tick()
+        if i < len(sessions):
+            router.submit(sessions[i])
+            i += 1
+        router.dispatch()
+        for rep in replicas:
+            for session, ttft in rep.step():
+                router.complete(session, ttft=ttft)
+                done += 1
+    wall = time.time() - t0
+
+    s = router.stats
+    print(f"[router] replicas={args.replicas} sessions={len(sessions)} "
+          f"reuse_frac={s.reuse_fraction:.2f} hit_rate={s.hit_rate:.2f} "
+          f"reprefill_tokens={s.reprefill_tokens}/{s.routed_tokens} "
+          f"sheds={s.sheds} syncs={s.syncs} "
+          f"dispatch_locality={router.metrics.locality:.2f} wall={wall:.1f}s")
+    for rep in replicas:
+        eng = rep.engine
+        print(f"  [replica {rep.rid}] served={eng.scheduler.metrics.admitted} "
+              f"prefill_positions={eng.prefill_positions} "
+              f"reused_positions={eng.reused_positions} "
+              f"prefix_hit_rate={eng.slots.telemetry.prefix_hit_rate:.2f} "
+              f"cap={router.fleet.cap(rep.rid)}")
     return 0
 
 

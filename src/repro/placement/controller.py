@@ -66,6 +66,17 @@ class AdaptiveController:
     tolerance: int = 1          # stalls per window forgiven before shrinking
     collapse_factor: float = 0.75  # multiplicative shrink on majority-stalled windows
     floor_relax: float = 1.001  # per-sample upward drift of the floor
+    # -- controller-coupled shedding (ROADMAP "controller-coupled placement"):
+    # when wired with a live per-domain occupancy view, per-domain slot
+    # capacities, and a topology, ``shed_home`` re-homes an admission whose
+    # home domain is saturated onto the least-occupied same-group sibling
+    # with headroom — load sheds sideways *before* the placement policy's
+    # nearest_spill is forced to go cross-group.  All three default to None
+    # (shedding off); ``DecodeEngine`` auto-wires them when it runs both a
+    # placement-aware slot cache and an adaptive controller.
+    occupancy: "object | None" = None      # zero-arg callable -> {domain: claims}
+    domain_capacity: "tuple | None" = None  # slots homed per domain
+    shed_topology: "object | None" = None   # repro.core.topology.Topology
 
     cap: int = field(init=False)
     samples: int = field(init=False, default=0)
@@ -114,6 +125,30 @@ class AdaptiveController:
             self.trajectory.append(self.cap)
             self._window_stalls = 0
         return self.cap
+
+    # -- controller-coupled shedding ------------------------------------------
+    def shed_home(self, home: int) -> int:
+        """Where a new admission homed at ``home`` should actually go: ``home``
+        while it has free capacity, else the least-occupied *same-group*
+        sibling with headroom (ties toward the lower domain index).  When the
+        whole group is saturated the home is returned unchanged — cross-group
+        traffic is the spill policy's decision, priced as a migration, not a
+        silent re-home.  No-op (returns ``home``) until occupancy, capacities,
+        and a topology are wired."""
+        topo = self.shed_topology
+        if self.occupancy is None or self.domain_capacity is None or topo is None:
+            return home
+        occ = self.occupancy()
+        if occ.get(home, 0) < self.domain_capacity[home]:
+            return home
+        siblings = [
+            d
+            for d in range(topo.n_domains)
+            if topo.distance(home, d) == 1 and occ.get(d, 0) < self.domain_capacity[d]
+        ]
+        if not siblings:
+            return home
+        return min(siblings, key=lambda d: (occ.get(d, 0), d))
 
     @property
     def stall_rate(self) -> float:

@@ -55,6 +55,15 @@ class DomainFreeLists:
     def __len__(self) -> int:
         return len(self._free_set)
 
+    @property
+    def domain_capacity(self) -> tuple[int, ...]:
+        """Total slots homed in each domain (free or claimed) — the capacity
+        the shed coupling compares occupancy against."""
+        caps = [0] * self.topology.n_domains
+        for d in self.slot_domain:
+            caps[d] += 1
+        return tuple(caps)
+
     def free_count(self, domain: int) -> int:
         return len(self._pools[domain])
 

@@ -23,6 +23,9 @@ class PlacementTelemetry:
     releases: int = 0
     handover_samples: int = 0
     handover_cycles: int = 0
+    # controller-coupled shedding: admissions re-homed to a sibling because
+    # the derived home was saturated (shed-before-spill)
+    sheds: int = 0
     # prefix-index coupling: how often homes were derived (vs caller-given)
     # and what fraction of prompt tokens the index had cached
     derived_homes: int = 0
@@ -62,6 +65,9 @@ class PlacementTelemetry:
     def record_release(self, slot_domain: int) -> None:
         self.releases += 1
         self.per_domain_occupancy[slot_domain] = self.per_domain_occupancy.get(slot_domain, 0) - 1
+
+    def record_shed(self) -> None:
+        self.sheds += 1
 
     def record_handover(self, latency) -> None:
         self.handover_samples += 1

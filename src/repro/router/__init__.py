@@ -1,0 +1,49 @@
+"""The router tier: CNA-disciplined routing over a fleet of decode replicas.
+
+The paper's two-queue discipline applied fractally one level up — replicas
+are top-level locality domains, the federation of prefix summaries says
+where each session is warm, and admission runs through the same
+``repro.core.discipline`` machinery the lock, the simulator, and the
+single-engine scheduler already share:
+
+  ``federation``   ``FederatedPrefixIndex``: per-replica top-K prefix
+                   summaries merged into one routable index;
+  ``router``       ``ReplicaRouter``: CNA admission over a replica-level
+                   ``Topology``, capacity gating, shed-before-stall;
+  ``replica``      the replica protocol: ``EngineReplica`` (a real
+                   ``DecodeEngine``) and ``FleetController`` (per-replica
+                   TTFT-driven admission caps — GCR at fleet granularity);
+  ``sim``          jax-free discrete-event fleet simulator + control arms
+                   (round-robin, least-loaded) for the benchmarks.
+"""
+
+from .federation import FederatedPrefixIndex, FederationStats, ReplicaSummary
+from .replica import EngineReplica, FleetController
+from .router import ReplicaRouter, RouterStats, Session
+from .sim import (
+    FleetCostModel,
+    FleetResult,
+    ReplicaCache,
+    SimReplica,
+    make_router,
+    shared_prefix_sessions,
+    simulate,
+)
+
+__all__ = [
+    "EngineReplica",
+    "FederatedPrefixIndex",
+    "FederationStats",
+    "FleetController",
+    "FleetCostModel",
+    "FleetResult",
+    "ReplicaCache",
+    "ReplicaRouter",
+    "ReplicaSummary",
+    "RouterStats",
+    "Session",
+    "SimReplica",
+    "make_router",
+    "shared_prefix_sessions",
+    "simulate",
+]

@@ -1,0 +1,183 @@
+"""Federated prefix homes: one index over many replicas' summaries.
+
+The paper's discipline keeps lock ownership where the cache is warm; one
+level up, a fleet of decode-engine replicas is itself a NUMA machine — a
+prefix hot on replica A should not be re-prefilled on replica B.  Replicas
+cannot share a live radix tree (they are separate processes in production),
+so each periodically emits a *compact summary* — its top-K hottest cached
+prefixes plus occupancy (``DecodeEngine.summary`` / ``PrefixIndex.summary``)
+— and this module aggregates them into one ``FederatedPrefixIndex`` that
+answers ``route(prompt) -> (replica, matched_len)`` by longest federated
+match with a least-loaded tie-break.
+
+The merged view is *rebuilt from the live summaries* whenever they change
+(summaries are tiny — K prefixes per replica — so a rebuild is cheap).
+Rebuilding, rather than patching, gives the federation its two safety
+properties by construction, both pinned by property tests:
+
+  * it never routes a matched prompt to a replica whose current summary did
+    not contain the matched run (a replica that stopped advertising a prefix
+    stops receiving its traffic at the next rebuild);
+  * staleness degrades, never errors: summaries older than ``max_age`` drop
+    out of the merged view, and a prompt matching nothing routes to the
+    least-loaded replica — the same cold-start rule ``PrefixIndex`` uses.
+
+The merged structure *is* a ``PrefixIndex`` whose "domains" are replica ids:
+the radix machinery, longest-prefix match, occupancy tie-break, and fallback
+are reused verbatim at the second hierarchy level.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.serving.prefixindex import PrefixIndex
+
+
+@dataclass(frozen=True)
+class ReplicaSummary:
+    """One replica's compact state export.
+
+    ``prefixes`` is hottest-first ``(tokens, stamp)`` pairs — the shape
+    ``PrefixIndex.summary`` emits; ``t`` is the router-clock emission time
+    used for staleness; ``occupancy``/``capacity`` are live admissions vs
+    slots, the load half of the route decision."""
+
+    replica: int
+    t: int
+    occupancy: int
+    capacity: int
+    prefixes: tuple = ()
+
+
+@dataclass
+class FederationStats:
+    routes: int = 0
+    hits: int = 0              # routes that matched >= 1 federated token
+    matched_tokens: int = 0
+    routed_tokens: int = 0
+    rebuilds: int = 0
+    applied: int = 0
+    expired: int = 0           # summaries dropped for staleness (per rebuild)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.hits / max(1, self.routes)
+
+    @property
+    def matched_fraction(self) -> float:
+        return self.matched_tokens / max(1, self.routed_tokens)
+
+
+class FederatedPrefixIndex:
+    """Aggregate per-replica prefix summaries; route by longest match.
+
+    ``occupancy`` is a zero-arg callable returning a live ``{replica: load}``
+    map (the router wires it to replica telemetry); without one, the last
+    summaries' occupancy plus a steered-since-summary delta is used, so the
+    tie-break never reads stale load without correction.  ``max_age`` (in
+    router-clock units) bounds how long a silent replica's summary keeps
+    attracting traffic; ``None`` trusts summaries forever.
+    """
+
+    def __init__(
+        self,
+        n_replicas: int,
+        *,
+        occupancy=None,
+        max_age: int | None = None,
+        capacity: int = 1 << 14,
+    ) -> None:
+        if n_replicas < 1:
+            raise ValueError("need at least one replica")
+        if max_age is not None and max_age < 0:
+            raise ValueError("max_age must be >= 0 (or None)")
+        self.n_replicas = n_replicas
+        self.occupancy = occupancy
+        self.max_age = max_age
+        self.capacity = capacity
+        self.stats = FederationStats()
+        self._summaries: dict[int, ReplicaSummary] = {}
+        self._steered: dict[int, int] = {}
+        self._version = 0
+        self._merged: PrefixIndex | None = None
+        self._built: tuple | None = None  # (version, frozenset of live replicas)
+
+    # -- load view -------------------------------------------------------------
+    def load(self, replica: int) -> int:
+        """Best-known live load of ``replica`` for tie-breaks/fallback."""
+        if self.occupancy is not None:
+            return int(self.occupancy().get(replica, 0))
+        s = self._summaries.get(replica)
+        base = s.occupancy if s is not None else 0
+        return base + self._steered.get(replica, 0)
+
+    def _load_view(self) -> dict[int, int]:
+        return {r: self.load(r) for r in range(self.n_replicas)}
+
+    def note_steered(self, replica: int) -> None:
+        """Record a route decision so the summary-based load view tracks
+        in-flight steering between syncs (no-op effect under a live
+        ``occupancy`` callable, which already sees it)."""
+        self._steered[replica] = self._steered.get(replica, 0) + 1
+
+    # -- summary ingestion -----------------------------------------------------
+    def apply(self, summary: ReplicaSummary) -> None:
+        """Ingest one replica summary, superseding that replica's previous
+        one entirely (a prefix absent from the new summary is no longer
+        advertised by the replica — it must stop attracting routes)."""
+        if not 0 <= summary.replica < self.n_replicas:
+            raise ValueError(
+                f"summary for replica {summary.replica} out of range "
+                f"({self.n_replicas} replicas)"
+            )
+        self._summaries[summary.replica] = summary
+        self._steered[summary.replica] = 0
+        self._version += 1
+        self.stats.applied += 1
+
+    def _live_summaries(self, now: int) -> list[ReplicaSummary]:
+        if self.max_age is None:
+            return list(self._summaries.values())
+        return [s for s in self._summaries.values() if now - s.t <= self.max_age]
+
+    def _ensure(self, now: int) -> PrefixIndex:
+        live = self._live_summaries(now)
+        key = (self._version, frozenset(s.replica for s in live))
+        if self._merged is not None and self._built == key:
+            return self._merged
+        merged = PrefixIndex(
+            n_domains=self.n_replicas,
+            occupancy=self._load_view,
+            capacity=self.capacity,
+        )
+        # deterministic rebuild: replicas in id order; within a summary,
+        # coldest first so the hottest prefix carries the freshest merged
+        # stamp (PrefixIndex breaks occupancy ties toward recency)
+        for s in sorted(live, key=lambda s: s.replica):
+            for tokens, _stamp in reversed(s.prefixes):
+                merged.record(tokens, s.replica)
+        self.stats.rebuilds += 1
+        self.stats.expired += len(self._summaries) - len(live)
+        self._merged, self._built = merged, key
+        return merged
+
+    # -- routing ---------------------------------------------------------------
+    def route(self, prompt, now: int = 0) -> tuple[int, int]:
+        """Longest federated prefix match for ``prompt`` ->
+        ``(replica, matched_len)``; ties break toward the least-loaded
+        holder, and a total miss (or an entirely stale/empty federation)
+        falls back to the least-loaded replica with ``matched_len`` 0."""
+        merged = self._ensure(now)
+        replica, matched = merged.home(prompt)
+        self.stats.routes += 1
+        self.stats.routed_tokens += len(prompt)
+        if matched:
+            self.stats.hits += 1
+            self.stats.matched_tokens += matched
+        assert replica is not None  # n_domains is set: fallback always answers
+        return replica, matched
+
+    def holder_summary(self, replica: int) -> ReplicaSummary | None:
+        """The summary currently on file for ``replica`` (tests/telemetry)."""
+        return self._summaries.get(replica)

@@ -1,0 +1,266 @@
+"""The replica router: CNA-disciplined admission over a fleet of replicas.
+
+The serving scheduler carried the paper's discipline to one engine's
+admission queue; this module carries it one hierarchy level up.  The mapping,
+at fleet granularity:
+
+  paper                      | router tier
+  ---------------------------+------------------------------------------
+  lock                       | the dispatch pipe (admissions are steered
+                             | one at a time; steering a different replica
+                             | than the last costs setup/transfer work)
+  thread                     | a queued session
+  NUMA socket of a thread    | the session's *home replica* — where the
+                             | federation says its prefix is warm
+  socket of the lock holder  | the most recently dispatched replica
+  main/secondary queues      | the same two CNA queues, reused verbatim
+                             | via ``CNAScheduler`` over a replica-level
+                             | ``Topology`` (replicas can be grouped into
+                             | cells/pods like sockets into pods)
+
+Sessions homed on the granted replica are "local"; others wait exactly as
+the paper's remote waiters do, with the same fairness threshold bounding
+starvation.  On top of the discipline the router adds what a fleet needs and
+a lock does not:
+
+  * capacity gating — a session is only dispatched when some replica has
+    headroom, and at most ``FleetController.cap(r)`` admissions are in
+    flight per replica (the GCR loop at fleet granularity, fed from
+    time-to-first-token);
+  * federation-steered homes — ``FederatedPrefixIndex.route`` assigns each
+    session's home from replica summaries at submit;
+  * shed-before-stall — when the granted session's home replica is
+    saturated, the dispatch sheds to the nearest replica (by the replica
+    topology) with headroom instead of stalling the pipe, mirroring the
+    placement layer's shed-before-spill.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.topology import Topology, flat, get_topology
+from repro.serving.scheduler import CNAScheduler
+
+from .federation import FederatedPrefixIndex
+from .replica import FleetController
+
+
+@dataclass
+class Session:
+    """One routed unit of work: a prompt plus decode budget."""
+
+    sid: int
+    prompt: tuple
+    decode_len: int = 8
+    submit_t: int = -1
+    dispatch_t: int = -1
+    finish_t: int = -1
+    home: int | None = None       # federation-routed replica
+    replica: int | None = None    # where it actually landed (after shedding)
+    matched_len: int = 0          # federation's believed cached prefix
+    local_matched: int = 0        # target replica's actual cached prefix
+
+    @property
+    def stall(self) -> int:
+        """Admission stall: router ticks from submit to dispatch."""
+        return self.dispatch_t - self.submit_t
+
+
+@dataclass
+class RouterStats:
+    """Router-level counters beyond the scheduler's admission metrics."""
+
+    dispatched: int = 0
+    sheds: int = 0
+    syncs: int = 0
+    reprefill_tokens: int = 0     # prompt tokens the target replica had to
+    routed_tokens: int = 0        # recompute, vs all routed prompt tokens
+    local_hits: int = 0           # dispatches whose target held >=1 token
+    stalls: list = field(default_factory=list)
+
+    @property
+    def hit_rate(self) -> float:
+        return self.local_hits / max(1, self.dispatched)
+
+    @property
+    def reuse_fraction(self) -> float:
+        """Fraction of routed prompt tokens already cached on the replica
+        that served them — the fleet-level locality number."""
+        return 1.0 - self.reprefill_tokens / max(1, self.routed_tokens)
+
+
+class ReplicaRouter:
+    """Front N replicas as top-level locality domains.
+
+    ``replicas`` implement the small replica protocol (``repro.router
+    .replica``): ``capacity``, ``occupancy``, ``has_capacity()``,
+    ``admit(session, now) -> matched_len`` and ``summary(top_k, now)``.
+    """
+
+    def __init__(
+        self,
+        replicas,
+        *,
+        topology: Topology | None = None,
+        fairness_threshold: int = 0xFF,
+        seed: int = 0xF1EE7,
+        sync_every: int = 32,
+        top_k: int = 8,
+        max_age: int | None = None,
+        controller: FleetController | None = None,
+    ) -> None:
+        self.replicas = list(replicas)
+        n = len(self.replicas)
+        if n < 1:
+            raise ValueError("need at least one replica")
+        topo = get_topology(topology) if topology is not None else flat(n, "replicas")
+        if topo.n_domains != n:
+            raise ValueError(
+                f"topology {topo.name!r} has {topo.n_domains} domains "
+                f"but {n} replicas were given"
+            )
+        self.topology = topo
+        self.federation = FederatedPrefixIndex(
+            n,
+            occupancy=lambda: {r: self.replicas[r].occupancy for r in range(n)},
+            max_age=max_age,
+        )
+        self.scheduler = CNAScheduler(
+            fairness_threshold=fairness_threshold, seed=seed, topology=topo
+        )
+        self.fleet = (
+            controller
+            if controller is not None
+            else FleetController(
+                n, initial=max(1, max(r.capacity for r in self.replicas))
+            )
+        )
+        if self.fleet.n_replicas != n:
+            raise ValueError(
+                f"controller spans {self.fleet.n_replicas} replicas, fleet has {n}"
+            )
+        self.sync_every = sync_every
+        self.top_k = top_k
+        self.stats = RouterStats()
+        self._last_target = 0  # where the dispatch pipe currently points
+
+    # -- clock -----------------------------------------------------------------
+    @property
+    def now(self) -> int:
+        return self.scheduler.now
+
+    @property
+    def metrics(self):
+        """Admission-side metrics (locality/switches/fairness) — the same
+        vocabulary every other driver of the discipline reports."""
+        return self.scheduler.metrics
+
+    def tick(self) -> None:
+        """Advance the router clock one tick; summaries re-sync every
+        ``sync_every`` ticks (0 disables periodic sync — call ``sync()``)."""
+        self.scheduler.tick()
+        if self.sync_every and self.now % self.sync_every == 0:
+            self.sync()
+
+    def advance(self, now: int) -> None:
+        """Tick the clock forward to ``now`` (event-driven callers)."""
+        while self.now < now:
+            self.tick()
+
+    # -- summaries -------------------------------------------------------------
+    def sync(self) -> None:
+        """Pull a fresh summary from every replica into the federation."""
+        for rid, rep in enumerate(self.replicas):
+            self.federation.apply(rep.summary(self.top_k, self.now))
+        self.stats.syncs += 1
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, session: Session) -> int:
+        """Home ``session`` via the federation and queue it under the CNA
+        discipline; returns the home replica."""
+        home, matched = self.federation.route(session.prompt, now=self.now)
+        session.home, session.matched_len = home, matched
+        session.submit_t = self.now
+        self.federation.note_steered(home)
+        self.scheduler.submit(session, home)
+        return home
+
+    def __len__(self) -> int:
+        return len(self.scheduler)
+
+    def _has_headroom(self, r: int) -> bool:
+        return self.replicas[r].has_capacity() and self.fleet.can_admit(r)
+
+    def dispatch_one(self) -> tuple[Session, int, int] | None:
+        """Grant the next session under the CNA discipline and steer it to a
+        replica; returns ``(session, replica, steer_distance)`` or None when
+        the queue is empty or no replica has headroom.  ``steer_distance``
+        is the replica-topology distance from the previously steered replica
+        (0 when the pipe stays on the same replica) — the cost drivers
+        charge for re-pointing the dispatch pipe."""
+        if not len(self.scheduler):
+            return None
+        candidates = [r for r in range(len(self.replicas)) if self._has_headroom(r)]
+        if not candidates:
+            return None
+        prev = self._last_target
+        if not self._has_headroom(self.scheduler.current_domain):
+            # The paper's "socket of the lock holder" is where the freed
+            # resource lives: point the pipe at the nearest replica with
+            # headroom *before* granting, so the discipline prefers sessions
+            # homed where capacity actually is.  Without this, a saturated
+            # fleet keeps granting sessions homed on the just-granted (full)
+            # replica and sheds nearly every dispatch — a locality-destroying
+            # feedback loop.
+            self.scheduler.current_domain = min(
+                candidates,
+                key=lambda r: (self.topology.distance(prev, r),
+                               self.fleet.inflight[r], r),
+            )
+        session = self.scheduler.next_request()
+        if session is None:
+            return None
+        target = session.home
+        if not self._has_headroom(target):
+            # shed-before-stall: nearest replica (then least inflight) with
+            # headroom takes the session rather than blocking the pipe
+            target = min(
+                candidates,
+                key=lambda r: (self.topology.distance(session.home, r),
+                               self.fleet.inflight[r], r),
+            )
+            self.stats.sheds += 1
+        dist = 0 if target == prev else self.topology.distance(prev, target)
+        self._last_target = target
+        session.replica = target
+        session.dispatch_t = self.now
+        # admit first: if the replica rejects (raises), the fleet controller
+        # must not be left with a phantom in-flight admission nobody will
+        # ever note_finish
+        session.local_matched = self.replicas[target].admit(session, self.now)
+        self.fleet.note_admit(target)
+        self.stats.dispatched += 1
+        self.stats.routed_tokens += len(session.prompt)
+        self.stats.reprefill_tokens += len(session.prompt) - session.local_matched
+        if session.local_matched:
+            self.stats.local_hits += 1
+        self.stats.stalls.append(session.stall)
+        return session, target, dist
+
+    def dispatch(self) -> list[tuple[Session, int, int]]:
+        """Drain dispatches until out of queue or headroom."""
+        out = []
+        while (d := self.dispatch_one()) is not None:
+            out.append(d)
+        return out
+
+    # -- completion ------------------------------------------------------------
+    def complete(self, session: Session, *, ttft: int | None = None) -> None:
+        """Report a session finished on its replica; ``ttft`` (submit ->
+        first token, in router-clock units) feeds the fleet controller's
+        GCR loop."""
+        session.finish_t = self.now
+        self.fleet.note_finish(session.replica)
+        if ttft is not None:
+            self.fleet.observe_ttft(session.replica, ttft)

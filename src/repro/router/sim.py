@@ -1,0 +1,409 @@
+"""Deterministic discrete-event fleet simulator for routing-policy evaluation.
+
+``repro.core.numasim`` reproduces the paper's lock dynamics with the smallest
+cost model that exhibits them; this module is the same idiom one hierarchy
+level up — seeded RNG, heapq event loop, integer tick costs — for a fleet of
+decode replicas behind a router.  The ingredients mirror what the router tier
+actually trades off:
+
+  * per-token prefill cost for the *uncached* part of each prompt (the
+    dominant term; re-prefilling a prefix that is warm elsewhere is the
+    fleet-level remote miss),
+  * per-token decode cost occupying a replica slot,
+  * a serialized dispatch pipe whose steering cost scales with the replica-
+    topology distance switched (why CNA-clustered dispatch order matters),
+  * finite per-replica KV memory: a token-budget LRU prefix cache, so a
+    replica that sees every prefix thrashes while a replica with a stable
+    working set stays warm — the mechanism that separates federated routing
+    from round-robin/least-loaded.
+
+Everything is driven by one ``random.Random(seed)``: bit-for-bit
+reproducible, no jax, so ``benchmarks/router_bench.py`` runs in the
+dependency-light CI smoke lane.
+"""
+
+from __future__ import annotations
+
+import heapq
+import random
+from collections import OrderedDict
+from dataclasses import dataclass, field
+
+from .federation import ReplicaSummary
+from .router import ReplicaRouter, Session
+
+
+@dataclass(frozen=True)
+class FleetCostModel:
+    """Tick costs (presets sized so prefill dominates, as it does in real
+    prefix-heavy serving)."""
+
+    c_prefill: int = 4      # per uncached prompt token
+    c_decode: int = 2       # per generated token (slot residency)
+    c_dispatch: int = 2     # router work per admission
+    c_steer: int = 8        # extra router work per unit replica-distance switched
+
+
+class ReplicaCache:
+    """Token-budget LRU prefix cache — finite KV memory for one replica.
+
+    Entries are full token sequences; an insert is charged only for the
+    tokens *not* shared with its best current match (the incremental cost of
+    a radix KV store, so many suffixes of one hot prefix do not multiply the
+    prefix's charge).  Evicting the least-recently-used entries frees their
+    charge.  ``match`` returns the longest common run against any entry and
+    refreshes the hit, so a steadily re-used prefix survives."""
+
+    def __init__(self, budget_tokens: int) -> None:
+        if budget_tokens < 1:
+            raise ValueError("budget_tokens must be >= 1")
+        self.budget = budget_tokens
+        self._lru: "OrderedDict[tuple, int]" = OrderedDict()  # seq -> charged
+        self._charged = 0
+        self._stamp = 0
+        self._stamps: dict[tuple, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    @property
+    def charged_tokens(self) -> int:
+        return self._charged
+
+    @staticmethod
+    def _common(a: tuple, b: tuple) -> int:
+        n = min(len(a), len(b))
+        k = 0
+        while k < n and a[k] == b[k]:
+            k += 1
+        return k
+
+    def match(self, tokens) -> int:
+        """Longest common run between ``tokens`` and any cached sequence."""
+        key = tuple(tokens)
+        best, best_key = 0, None
+        for seq in self._lru:
+            k = self._common(seq, key)
+            if k > best:
+                best, best_key = k, seq
+        if best_key is not None:
+            self._touch(best_key)
+        return best
+
+    def _touch(self, key: tuple) -> None:
+        self._lru.move_to_end(key)
+        self._stamp += 1
+        self._stamps[key] = self._stamp
+
+    def insert(self, tokens) -> int:
+        """Cache ``tokens``; returns the charged (uncached) token count."""
+        key = tuple(tokens)
+        if not key:
+            return 0
+        if key in self._lru:
+            self._touch(key)
+            return 0
+        charge = len(key) - self.match(key)
+        self._lru[key] = charge
+        self._charged += charge
+        self._touch(key)
+        while self._charged > self.budget and len(self._lru) > 1:
+            old, freed = self._lru.popitem(last=False)
+            del self._stamps[old]
+            self._charged -= freed
+        return charge
+
+    def hottest(self, top_k: int) -> list[tuple[tuple, int]]:
+        """Most-recently-used ``top_k`` sequences as (tokens, stamp) pairs,
+        hottest first — the summary shape the federation ingests."""
+        out = [(seq, self._stamps[seq]) for seq in reversed(self._lru)]
+        return out[:top_k]
+
+
+class SimReplica:
+    """One simulated decode replica: slots + a finite prefix cache."""
+
+    def __init__(self, rid: int, n_slots: int, *, cache_budget: int) -> None:
+        self.rid = rid
+        self.n_slots = n_slots
+        self.cache = ReplicaCache(cache_budget)
+        self.inflight = 0
+        self.served = 0
+        self.reprefill_tokens = 0
+
+    @property
+    def capacity(self) -> int:
+        return self.n_slots
+
+    @property
+    def occupancy(self) -> int:
+        return self.inflight
+
+    def has_capacity(self) -> bool:
+        return self.inflight < self.n_slots
+
+    def summary(self, top_k: int, now: int) -> ReplicaSummary:
+        return ReplicaSummary(
+            replica=self.rid,
+            t=now,
+            occupancy=self.inflight,
+            capacity=self.n_slots,
+            prefixes=tuple(self.cache.hottest(top_k)),
+        )
+
+    def admit(self, session: Session, now: int) -> int:
+        """Occupy a slot; the prompt's cached run is reused, the uncached
+        suffix is (re-)prefilled and enters this replica's cache."""
+        if not self.has_capacity():
+            raise ValueError(f"replica {self.rid} is full")
+        self.inflight += 1
+        matched = self.cache.match(session.prompt)
+        self.cache.insert(session.prompt)
+        self.served += 1
+        self.reprefill_tokens += len(session.prompt) - matched
+        return matched
+
+    def finish(self, session: Session) -> None:
+        if self.inflight <= 0:
+            raise ValueError(f"replica {self.rid} has nothing in flight")
+        self.inflight -= 1
+
+
+class _BaselineRouter:
+    """Round-robin / least-loaded control arms behind the router interface
+    (FIFO dispatch, no federation, same capacity gating and completion
+    accounting, so the comparison isolates the routing policy)."""
+
+    def __init__(self, replicas, *, policy: str, topology=None) -> None:
+        from collections import deque
+
+        from repro.core.topology import flat, get_topology
+
+        from .router import RouterStats
+
+        self.replicas = list(replicas)
+        n = len(self.replicas)
+        self.topology = (
+            get_topology(topology) if topology is not None else flat(n, "replicas")
+        )
+        self.policy = policy
+        self._q: "deque[Session]" = deque()
+        self._clock = 0
+        self._rr = 0
+        self._prev = 0
+        self.stats = RouterStats()
+
+    @property
+    def now(self) -> int:
+        return self._clock
+
+    def tick(self) -> None:
+        self._clock += 1
+
+    def advance(self, now: int) -> None:
+        while self._clock < now:
+            self.tick()
+
+    def sync(self) -> None:  # baselines have no federation
+        pass
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, session: Session) -> int:
+        session.submit_t = self.now
+        session.home = 0
+        self._q.append(session)
+        return 0
+
+    def _pick(self) -> int | None:
+        n = len(self.replicas)
+        free = [r for r in range(n) if self.replicas[r].has_capacity()]
+        if not free:
+            return None
+        if self.policy == "round_robin":
+            for off in range(n):
+                r = (self._rr + off) % n
+                if r in free:
+                    self._rr = r + 1
+                    return r
+        return min(free, key=lambda r: (self.replicas[r].occupancy, r))
+
+    def dispatch_one(self):
+        if not self._q:
+            return None
+        target = self._pick()
+        if target is None:
+            return None
+        session = self._q.popleft()
+        session.replica = target
+        session.home = target
+        session.dispatch_t = self.now
+        dist = 0 if target == self._prev else self.topology.distance(self._prev, target)
+        self._prev = target
+        session.local_matched = self.replicas[target].admit(session, self.now)
+        self.stats.dispatched += 1
+        self.stats.routed_tokens += len(session.prompt)
+        self.stats.reprefill_tokens += len(session.prompt) - session.local_matched
+        if session.local_matched:
+            self.stats.local_hits += 1
+        self.stats.stalls.append(session.stall)
+        return session, target, dist
+
+    def complete(self, session: Session, *, ttft=None) -> None:
+        session.finish_t = self.now
+
+
+@dataclass
+class FleetResult:
+    name: str
+    n_sessions: int = 0
+    ticks: int = 0
+    reprefill_tokens: int = 0
+    routed_tokens: int = 0
+    hit_rate: float = 0.0
+    reuse_fraction: float = 0.0
+    stall_mean: float = 0.0
+    stall_p99: float = 0.0
+    sheds: int = 0
+    dispatch_locality: float = 0.0   # discipline-side: no-switch dispatches
+    per_replica_served: list = field(default_factory=list)
+    ttfts: list = field(default_factory=list)
+
+    @property
+    def fairness_factor(self) -> float:
+        counts = sorted(self.per_replica_served, reverse=True)
+        tot = sum(counts)
+        if not counts or tot == 0:
+            return 1.0
+        half = max(1, len(counts) // 2)
+        return sum(counts[:half]) / tot
+
+
+def shared_prefix_sessions(
+    draws, prefix_len: int, suffix_len: int, decode_len: int
+) -> list[Session]:
+    """Sessions over shared system-prompt prefixes + unique suffixes — the
+    same workload shape ``benchmarks.serving_bench.shared_prefix`` uses, at
+    session granularity.  ``draws`` is the prefix id per session (callers
+    sample it, e.g. with ``benchmarks.common.zipf_draws``, so every bench
+    workload skews identically)."""
+    return [
+        Session(
+            sid=i,
+            prompt=tuple(1_000 * pid + j for j in range(prefix_len))
+            + tuple(900_000 + i * suffix_len + j for j in range(suffix_len)),
+            decode_len=decode_len,
+        )
+        for i, pid in enumerate(draws)
+    ]
+
+
+def make_router(arm: str, replicas, *, topology=None, seed: int = 0xF1EE7, **kw):
+    """Build the routing arm: ``federated`` (the tier under test) or the
+    ``round_robin`` / ``least_loaded`` controls."""
+    if arm == "federated":
+        return ReplicaRouter(replicas, topology=topology, seed=seed, **kw)
+    if arm in ("round_robin", "least_loaded"):
+        return _BaselineRouter(replicas, policy=arm, topology=topology)
+    raise KeyError(f"unknown routing arm {arm!r}")
+
+
+def simulate(
+    arm: str,
+    sessions: list[Session],
+    *,
+    n_replicas: int = 4,
+    n_slots: int = 4,
+    cache_budget: int = 600,
+    topology=None,
+    cm: FleetCostModel | None = None,
+    inter_arrival: int = 16,
+    seed: int = 42,
+    router_kwargs: dict | None = None,
+) -> FleetResult:
+    """Run ``sessions`` through a fleet under one routing arm; returns the
+    aggregate ``FleetResult``.  Event loop: arrivals are scheduled up front
+    with ~uniform jitter around ``inter_arrival``; dispatches drain whenever
+    the serialized dispatch pipe is free; a dispatched session occupies its
+    replica for prefill(uncached) + decode ticks, then frees the slot and
+    reports TTFT to the router."""
+    cm = cm or FleetCostModel()
+    rng = random.Random(seed)
+    replicas = [
+        SimReplica(r, n_slots, cache_budget=cache_budget) for r in range(n_replicas)
+    ]
+    router = make_router(arm, replicas, topology=topology, seed=seed,
+                         **(router_kwargs or {}))
+
+    events: list[tuple[int, int, str, object]] = []
+    seq = 0
+
+    def push(t: int, kind: str, payload) -> None:
+        nonlocal seq
+        seq += 1
+        heapq.heappush(events, (t, seq, kind, payload))
+
+    t = 0
+    for s in sessions:
+        t += max(1, int(inter_arrival * rng.uniform(0.5, 1.5)))
+        push(t, "arrive", s)
+
+    busy_until = 0
+    finished = 0
+    ttfts: list[int] = []
+    last_t = 0
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        last_t = t
+        router.advance(t)
+        if kind == "arrive":
+            router.submit(payload)
+        elif kind == "finish":
+            session, ttft = payload
+            replicas[session.replica].finish(session)
+            router.complete(session, ttft=ttft)
+            ttfts.append(ttft)
+            finished += 1
+        # drain the dispatch pipe
+        while busy_until <= t:
+            d = router.dispatch_one()
+            if d is None:
+                break
+            session, target, dist = d
+            cost = cm.c_dispatch + cm.c_steer * dist
+            start = t + cost
+            busy_until = start
+            uncached = len(session.prompt) - session.local_matched
+            prefill = cm.c_prefill * uncached
+            # TTFT for the fleet controller runs from *dispatch*, not submit:
+            # the GCR loop throttles a replica whose admissions take long to
+            # produce a first token (cold-cache storms, internal queueing) —
+            # router-side queueing is the signal's *output*, and feeding it
+            # back would read congestion as collapse and choke the fleet
+            ttft = start + prefill - session.dispatch_t
+            finish_t = start + prefill + cm.c_decode * session.decode_len
+            push(finish_t, "finish", (session, ttft))
+        if busy_until > t and len(router):
+            push(busy_until, "drain", None)
+
+    assert finished == len(sessions), f"{finished}/{len(sessions)} finished"
+    stats = router.stats
+    stalls = sorted(stats.stalls)
+    p99 = stalls[min(len(stalls) - 1, int(0.99 * len(stalls)))] if stalls else 0
+    m = getattr(router, "metrics", None)
+    return FleetResult(
+        name=arm,
+        n_sessions=len(sessions),
+        ticks=last_t,
+        reprefill_tokens=stats.reprefill_tokens,
+        routed_tokens=stats.routed_tokens,
+        hit_rate=stats.hit_rate,
+        reuse_fraction=stats.reuse_fraction,
+        stall_mean=sum(stalls) / max(1, len(stalls)),
+        stall_p99=float(p99),
+        sheds=getattr(stats, "sheds", 0),
+        dispatch_locality=m.locality if m is not None else 0.0,
+        per_replica_served=[r.served for r in replicas],
+        ttfts=ttfts,
+    )

@@ -1,3 +1,30 @@
-from .engine import DecodeEngine, Request  # noqa: F401
+"""Serving layer: continuous-batching engine, CNA admission, prefix reuse.
+
+The engine (and its slot cache) needs jax; everything else here — the
+schedulers, the prefix index, the prefix-KV store's bookkeeping — is pure
+python.  The jax-dependent names load lazily so dependency-light consumers
+(the router tier, the benchmark smoke lane) can import this package without
+an accelerator stack installed.
+"""
+
 from .prefixindex import PrefixIndex  # noqa: F401
+from .prefixkv import PrefixKVStore  # noqa: F401
 from .scheduler import CNAScheduler, FIFOScheduler, SchedulerMetrics  # noqa: F401
+
+_LAZY = ("DecodeEngine", "Request", "SlotCache")
+
+
+def __getattr__(name):
+    if name in ("DecodeEngine", "Request"):
+        from . import engine
+
+        return getattr(engine, name)
+    if name == "SlotCache":
+        from .kvcache import SlotCache
+
+        return SlotCache
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_LAZY))

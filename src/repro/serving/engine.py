@@ -21,6 +21,7 @@ import numpy as np
 
 from .kvcache import SlotCache
 from .prefixindex import PrefixIndex
+from .prefixkv import PrefixKVStore
 from .scheduler import CNAScheduler
 
 
@@ -35,6 +36,7 @@ class Request:
     domain: int | None = 0
     out: list = field(default_factory=list)
     submit_t: int = 0
+    admit_t: int = -1             # scheduler tick the request won a slot
     finish_t: int = -1
     # prompt tokens whose KV is already cached in the home domain (set by
     # prefix-index derivation); discounts the migration stall at admission —
@@ -61,6 +63,7 @@ class DecodeEngine:
         placement=None,
         slot_migration_cost: int = 2,
         prefix_index=None,
+        prefix_kv=None,
     ):
         self.model = model
         self.params = params
@@ -114,6 +117,29 @@ class DecodeEngine:
             # frozen counters
             telemetry = self.slots.telemetry
             prefix_index.occupancy = lambda: telemetry.per_domain_occupancy
+        # prefix_kv: a repro.serving.PrefixKVStore (or True for a default one)
+        # holding prefilled caches by prompt prefix, so a prompt extending a
+        # stored prefix resumes decode from it instead of re-prefilling —
+        # prefill_positions counts positions actually computed.
+        if prefix_kv is True:
+            prefix_kv = PrefixKVStore()
+        self.prefix_kv = prefix_kv
+        self.prefill_positions = 0
+        self.reused_positions = 0
+        # controller-coupled shedding: with both a placement-aware slot cache
+        # and an adaptive controller, wire the controller's occupancy view so
+        # a saturated home domain sheds new admissions to same-group siblings
+        # before nearest_spill is forced to go cross-group (repro.placement).
+        ctl = self.scheduler.controller
+        if ctl is not None and self.slots.telemetry is not None:
+            tel = self.slots.telemetry
+            # rebind unconditionally, same rationale as the prefix index
+            # above: a controller reused from a retired engine must not keep
+            # shedding against the old engine's frozen occupancy counters or
+            # a differently-shaped topology/capacity table
+            ctl.occupancy = lambda: tel.per_domain_occupancy
+            ctl.shed_topology = self.scheduler.topology
+            ctl.domain_capacity = self.slots.pools.domain_capacity
         self.tokens = jnp.zeros((n_slots, 1), jnp.int32)
         self.active_req: dict[int, Request] = {}
         # simulated cost accounting: a domain switch stalls the pipe while the
@@ -154,6 +180,17 @@ class DecodeEngine:
             # the engine's only defensible default, and it is explicit here
             # rather than coerced deep inside SlotCache.claim
             req.domain = 0 if domain is None else domain
+        ctl = self.scheduler.controller
+        if ctl is not None and self.slots.telemetry is not None:
+            shed = ctl.shed_home(req.domain)
+            if shed != req.domain:
+                # home saturated, a same-group sibling has headroom: re-home
+                # the admission there (shed) rather than letting placement
+                # spill it — the matched-prefix discount no longer applies
+                # at the new home, so the charge model stays honest
+                req.domain = shed
+                req.matched_len = 0
+                self.slots.telemetry.record_shed()
         req.submit_t = self.scheduler.now
         self.scheduler.submit(req, req.domain)
 
@@ -182,13 +219,89 @@ class DecodeEngine:
             # one handover sample per admission: the GCR feedback signal for
             # an adaptive max_active (no-op under a static/absent cap)
             self.scheduler.observe_handover(stall)
-            logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(req.prompt)[None]})
-            cache["pos"] = jnp.asarray(cache["pos"], jnp.int32)
+            req.admit_t = self.scheduler.now
+            logits, cache = self._prefill_reuse(req.prompt, req.matched_len)
             self.slots.insert(slot, cache)
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
             self.tokens = self.tokens.at[slot, 0].set(tok)
             self.active_req[slot] = req
+
+    def _prefill_reuse(self, prompt, hint_len: int = 0):
+        """Prefill ``prompt``, resuming from the longest stored prefix cache
+        when a ``PrefixKVStore`` is wired.  A stored prefix seeds the KV
+        write position past the cached run and only the uncached suffix is
+        computed (one ``decode_step`` per suffix token — the incremental form
+        of prefill, so results match the from-scratch path exactly);
+        ``prefill_positions`` counts positions actually computed, which is
+        what makes the reuse pinnable by tests and benchmarks.
+
+        ``hint_len`` is the prefix index's ``matched_len``: when the store
+        has no entry prefix-matching this prompt but the index says the run
+        ``prompt[:hint_len]`` is hot, the prefill is split at that boundary
+        and the boundary cache deposited, so the *next* prompt sharing the
+        run resumes from it.  (Stored keys must be exact prefixes of the
+        incoming prompt; shared-system-prompt traffic diverges after the
+        common run, so without the boundary entry only whole-prompt
+        extensions would ever hit.)"""
+        store = self.prefix_kv
+        if store is None:
+            logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompt)[None]})
+            cache["pos"] = jnp.asarray(cache["pos"], jnp.int32)
+            self.prefill_positions += len(prompt)
+            return logits, cache
+        reuse = store.longest(prompt)
+        # boundary hint: the index's matched_len (what the home pool holds)
+        # or the store's own longest common run against a stored key —
+        # whichever sees the longer shared run.  matched_len alone misses
+        # batches submitted against a cold index (homes derive at submit,
+        # before any placement taught the index).
+        if reuse is None:
+            hint_len = max(int(hint_len), store.common_run(prompt))
+            if hint_len < store.min_plant:
+                hint_len = 0
+        if reuse is not None:
+            matched, cache, logits = reuse
+            self.reused_positions += matched
+        elif 0 < hint_len <= len(prompt):
+            boundary = [int(t) for t in prompt[:hint_len]]
+            logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(boundary)[None]})
+            # deposits go through fit_single so every stored entry — and
+            # every suffix decode_step below — shares one (batch=1,
+            # cache_len) shape and thus one jit trace; jax arrays are
+            # immutable, so entries hold references, not copies
+            cache = self.slots.fit_single(cache)
+            store.put(boundary, cache, logits)
+            matched = hint_len
+            self.prefill_positions += hint_len
+        else:
+            matched = 0
+        if matched == 0:
+            logits, cache = self._prefill(self.params, {"tokens": jnp.asarray(prompt)[None]})
+            cache = self.slots.fit_single(cache)
+            self.prefill_positions += len(prompt)
+        else:
+            for i in range(matched, len(prompt)):
+                logits, cache = self._step(
+                    self.params, cache, jnp.asarray([[int(prompt[i])]], jnp.int32)
+                )
+            self.prefill_positions += len(prompt) - matched
+        store.put([int(t) for t in prompt], cache, logits)
+        return logits, cache
+
+    # -- federation export -----------------------------------------------------
+    def summary(self, top_k: int = 8) -> dict:
+        """Compact replica-state export for a fleet/router tier
+        (``repro.router``): live occupancy (decoding + queued) against slot
+        capacity, plus the prefix index's hottest cached prefixes.  Plain
+        dict so the serving layer stays import-independent of the router."""
+        return {
+            "occupancy": len(self.active_req) + len(self.scheduler),
+            "capacity": self.n_slots,
+            "prefixes": tuple(self.prefix_index.summary(top_k))
+            if self.prefix_index is not None
+            else (),
+        }
 
     # -- decode ----------------------------------------------------------------
     def step(self):

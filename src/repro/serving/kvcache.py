@@ -153,6 +153,24 @@ class SlotCache:
             raise ValueError(f"slot {slot} out of range")
         return self.pools.slot_domain[slot]
 
+    def fit_single(self, single_cache):
+        """Pad/trim a (batch=1) prefill cache so every leaf matches this
+        cache's shapes with the batch axis forced to 1.  Stored prefix caches
+        (``repro.serving.prefixkv``) go through this once at deposit time so
+        all of them share one shape regardless of the prompt length they were
+        built from — suffix ``decode_step`` calls then hit a single jit
+        trace, and ``insert`` is a no-op refit."""
+        new = {}
+        for key in self.cache:
+            if key == "pos":
+                continue
+            new[key] = jax.tree.map(
+                lambda dst, src, ax: src if ax is None else _fit(jnp.asarray(src), dst, ax),
+                self.cache[key], single_cache[key], self.axes[key],
+            )
+        new["pos"] = jnp.asarray(single_cache["pos"], jnp.int32)
+        return new
+
     def insert(self, slot: int, single_cache):
         """Insert a (batch=1) prefill cache into ``slot``."""
 

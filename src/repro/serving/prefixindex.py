@@ -183,6 +183,41 @@ class PrefixIndex:
         occ = self.occupancy() if self.occupancy is not None else {}
         return min(range(self.n_domains), key=lambda d: (occ.get(d, 0), d))
 
+    # -- federation export -----------------------------------------------------
+    def summary(self, top_k: int = 8) -> list[tuple[tuple[int, ...], int]]:
+        """The ``top_k`` hottest cached prefixes as ``(tokens, stamp)`` pairs,
+        hottest first — the compact state a fleet/router tier aggregates
+        (``repro.router.federation``).  Hotness is last-touch recency; among
+        nodes of equal stamp the deeper path wins and subsumed prefixes (a
+        path that is a prefix of an already-chosen one) are skipped, so the K
+        slots carry K distinct maximal runs rather than one run K times."""
+        scored = []
+        stack = [(self.root, ())]
+        while stack:
+            node, path = stack.pop()
+            for child in node.children.values():
+                cpath = path + child.edge
+                scored.append((-child.stamp, -len(cpath), cpath))
+                stack.append((child, cpath))
+        scored.sort()
+        out: list[tuple[tuple[int, ...], int]] = []
+        for neg_stamp, _, cpath in scored:
+            if any(chosen[: len(cpath)] == cpath for chosen, _ in out):
+                continue  # subsumed: a deeper, at-least-as-hot path is in
+            ext = next(
+                (i for i, (chosen, _) in enumerate(out)
+                 if cpath[: len(chosen)] == chosen),
+                None,
+            )
+            if ext is not None:
+                # a colder extension of a chosen run: deepen that entry in
+                # place (recording the extension covers every prefix of it)
+                # rather than spending a second slot on the same run
+                out[ext] = (cpath, out[ext][1])
+            elif len(out) < top_k:
+                out.append((cpath, -neg_stamp))
+        return out
+
     # -- capacity --------------------------------------------------------------
     def _evict(self) -> None:
         """Prune least-recently-touched leaves until 3/4 of capacity.  Rounds

@@ -1,0 +1,100 @@
+"""Prefix-KV reuse: an LRU store of prefilled (batch=1) caches by prompt.
+
+``PrefixIndex`` makes prefix reuse visible to *routing* (which domain holds a
+prefix) and discounts the migration stall — but until this module the engine
+still recomputed the whole prompt at prefill.  ``PrefixKVStore`` closes that
+gap: after each admission the engine deposits the prompt's prefilled cache
+here (jax arrays are immutable, so an entry is a bundle of references, not a
+copy), and a later prompt that *extends* a stored prefix resumes from the
+stored cache — the KV write position is seeded past the cached run and only
+the uncached suffix is computed, one ``decode_step`` per suffix token.  That
+is true prefix-cache reuse (RadixAttention-style), not just a stall discount;
+``DecodeEngine.prefill_positions`` counts exactly how many positions were
+computed so tests and benchmarks can pin the savings.
+
+Keys are exact token prefixes: an entry is only usable when its key equals
+``prompt[:len(key)]`` (the cache encodes those tokens and nothing else), so
+lookup is longest-stored-prefix, not longest-common-run.  Entries are LRU
+over a bounded count — each holds references to a full per-request cache, so
+the bound is the memory knob.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any
+
+
+class PrefixKVStore:
+    """LRU ``token-prefix -> (cache, logits)`` store for prefill reuse."""
+
+    def __init__(self, capacity: int = 16, *, min_plant: int = 4) -> None:
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        # shortest common run worth planting a boundary entry for (shorter
+        # runs are chance collisions: the split prefill would cost a jit
+        # trace to save almost nothing)
+        self.min_plant = min_plant
+        self._lru: "OrderedDict[tuple[int, ...], tuple[Any, Any]]" = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.reused_tokens = 0
+
+    @staticmethod
+    def _key(tokens) -> tuple[int, ...]:
+        return tuple(int(t) for t in tokens)
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, tokens) -> bool:
+        return self._key(tokens) in self._lru
+
+    def put(self, tokens, cache, logits) -> None:
+        """Deposit the prefilled cache (+ next-token logits) for ``tokens``.
+        Re-putting an existing key refreshes it (and its recency)."""
+        key = self._key(tokens)
+        if not key:
+            return
+        self._lru.pop(key, None)
+        self._lru[key] = (cache, logits)
+        while len(self._lru) > self.capacity:
+            self._lru.popitem(last=False)
+
+    def longest(self, tokens) -> tuple[int, Any, Any] | None:
+        """Longest stored key that is an exact prefix of ``tokens`` ->
+        ``(matched_len, cache, logits)``, or None.  The hit is touched so hot
+        prefixes survive the LRU."""
+        key = self._key(tokens)
+        best = None
+        for stored in self._lru:
+            if len(stored) <= len(key) and stored == key[: len(stored)]:
+                if best is None or len(stored) > len(best):
+                    best = stored
+        if best is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.reused_tokens += len(best)
+        self._lru.move_to_end(best)
+        cache, logits = self._lru[best]
+        return len(best), cache, logits
+
+    def common_run(self, tokens) -> int:
+        """Longest common token run between ``tokens`` and any stored key —
+        the boundary-planting hint when no stored key is an exact prefix
+        (shared-system-prompt traffic: stored ``P+s1`` vs incoming ``P+s2``
+        share the run ``P`` but neither prefixes the other)."""
+        key = self._key(tokens)
+        best = 0
+        for stored in self._lru:
+            n = min(len(stored), len(key))
+            k = 0
+            while k < n and stored[k] == key[k]:
+                k += 1
+            best = max(best, k)
+        return best
+
+    def clear(self) -> None:
+        self._lru.clear()

@@ -178,7 +178,22 @@ class CNAScheduler(_BaseScheduler):
 
 
 class FIFOScheduler(_BaseScheduler):
-    """MCS-admission baseline: strict arrival order, domain-oblivious."""
+    """MCS-admission baseline: strict arrival order, domain-oblivious.
 
-    def __init__(self, *, topology: Topology | None = None, **_):
-        super().__init__(FIFOAdmissionQueue(), topology=topology)
+    Takes exactly the kwargs that keep the baseline comparable to
+    ``CNAScheduler`` — the topology and the GCR restriction knobs (honoured
+    via ``RestrictedDiscipline`` over the FIFO core).  Anything else raises:
+    an earlier ``**_`` swallowed unknown kwargs, so ``controller=...`` or a
+    misspelled ``fairness_threshold=`` silently ran a different experiment."""
+
+    def __init__(
+        self,
+        *,
+        topology: Topology | None = None,
+        max_active=None,  # int | repro.placement.AdaptiveController | None
+        rotate_after: int = 64,
+    ):
+        super().__init__(
+            FIFOAdmissionQueue(max_active=max_active, rotate_after=rotate_after),
+            topology=topology,
+        )

@@ -1,0 +1,174 @@
+"""repro.router.federation: summary aggregation, longest federated match,
+and the two safety properties the rebuild-from-summaries design guarantees —
+a matched route always lands on a replica whose *current* summary contains
+the matched run, and staleness degrades to least-loaded, never to an error."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.router import FederatedPrefixIndex, ReplicaSummary
+
+
+def _summary(replica, t, prefixes, occupancy=0, capacity=4):
+    return ReplicaSummary(replica=replica, t=t, occupancy=occupancy,
+                          capacity=capacity,
+                          prefixes=tuple((tuple(p), i + 1) for i, p in enumerate(prefixes)))
+
+
+# -- routing basics ------------------------------------------------------------
+
+
+def test_cold_federation_falls_back_least_loaded_never_errors():
+    occ = {0: 3, 1: 1, 2: 2}
+    fed = FederatedPrefixIndex(3, occupancy=lambda: occ)
+    assert fed.route([1, 2, 3]) == (1, 0)
+    occ.update({1: 9})
+    assert fed.route([1, 2, 3]) == (2, 0)
+
+
+def test_longest_federated_match_wins():
+    occ = {0: 0, 1: 0}
+    fed = FederatedPrefixIndex(3, occupancy=lambda: occ)
+    fed.apply(_summary(0, 0, [[1, 2]]))
+    fed.apply(_summary(1, 0, [[1, 2, 3, 4]]))
+    replica, matched = fed.route([1, 2, 3, 4, 9])
+    assert (replica, matched) == (1, 4)
+    # [1,2] is held by BOTH (a holder of a sequence holds its prefixes);
+    # load breaks the tie
+    occ.update({1: 5})
+    assert fed.route([1, 2, 9]) == (0, 2)
+    occ.update({0: 9})
+    assert fed.route([1, 2, 9]) == (1, 2)
+
+
+def test_occupancy_breaks_ties_between_coholders():
+    occ = {0: 0, 1: 0}
+    fed = FederatedPrefixIndex(2, occupancy=lambda: occ)
+    fed.apply(_summary(0, 0, [[5, 6, 7]]))
+    fed.apply(_summary(1, 0, [[5, 6, 7]]))
+    occ.update({0: 4, 1: 1})
+    assert fed.route([5, 6, 7, 8])[0] == 1
+    occ.update({0: 1, 1: 4})
+    assert fed.route([5, 6, 7, 8])[0] == 0
+
+
+def test_new_summary_supersedes_old_entirely():
+    """A prefix absent from a replica's new summary stops routing there —
+    the federation never routes on a replica's *withdrawn* advertisement."""
+    fed = FederatedPrefixIndex(2)
+    fed.apply(_summary(0, 0, [[1, 2, 3]]))
+    assert fed.route([1, 2, 3]) == (0, 3)
+    fed.apply(_summary(0, 1, [[7, 8, 9]]))  # replica 0 no longer holds [1,2,3]
+    replica, matched = fed.route([1, 2, 3])
+    assert matched == 0  # no holder anymore: least-loaded fallback
+    assert fed.route([7, 8, 9]) == (0, 3)
+
+
+def test_validation():
+    fed = FederatedPrefixIndex(2)
+    with pytest.raises(ValueError):
+        fed.apply(_summary(2, 0, [[1]]))
+    with pytest.raises(ValueError):
+        FederatedPrefixIndex(0)
+    with pytest.raises(ValueError):
+        FederatedPrefixIndex(2, max_age=-1)
+
+
+# -- staleness -----------------------------------------------------------------
+
+
+def test_stale_summaries_degrade_to_least_loaded():
+    occ = {0: 5, 1: 0}
+    fed = FederatedPrefixIndex(2, occupancy=lambda: occ, max_age=10)
+    fed.apply(_summary(0, t=0, prefixes=[[1, 2, 3]]))
+    assert fed.route([1, 2, 3], now=5) == (0, 3)      # fresh: matched
+    assert fed.route([1, 2, 3], now=11) == (1, 0)     # stale: least-loaded
+    assert fed.route([1, 2, 3], now=10_000) == (1, 0)  # arbitrarily stale: no error
+    fed.apply(_summary(0, t=10_000, prefixes=[[1, 2, 3]]))
+    assert fed.route([1, 2, 3], now=10_001) == (0, 3)  # re-freshened: matched again
+
+
+def test_summary_load_view_tracks_steering_between_syncs():
+    fed = FederatedPrefixIndex(2)  # no live occupancy: summary + steered
+    fed.apply(_summary(0, 0, [[1]], occupancy=1))
+    fed.apply(_summary(1, 0, [[2]], occupancy=1))
+    assert fed.load(0) == fed.load(1) == 1
+    fed.note_steered(0)
+    fed.note_steered(0)
+    assert fed.load(0) == 3
+    fed.apply(_summary(0, 1, [[1]], occupancy=2))  # fresh summary resets delta
+    assert fed.load(0) == 2
+
+
+# -- the two properties, property-tested ---------------------------------------
+
+
+def _token_seq(rng_len=6):
+    return st.lists(st.integers(0, 3), min_size=1, max_size=rng_len)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    summaries=st.lists(
+        st.tuples(st.integers(0, 3), st.lists(_token_seq(), min_size=0, max_size=4)),
+        min_size=1,
+        max_size=8,
+    ),
+    prompt=st.lists(st.integers(0, 3), min_size=1, max_size=10),
+)
+def test_prop_matched_route_target_advertised_the_match(summaries, prompt):
+    """Whenever route() matches >= 1 token, the chosen replica's *current*
+    summary contains a sequence sharing at least matched_len tokens with the
+    prompt.  (Tiny alphabet on purpose: forces overlapping prefixes, edge
+    splits, and multi-holder nodes.)"""
+    fed = FederatedPrefixIndex(4)
+    latest = {}
+    for t, (replica, seqs) in enumerate(summaries):
+        s = _summary(replica, t, seqs)
+        fed.apply(s)
+        latest[replica] = s
+    replica, matched = fed.route(prompt)
+    assert 0 <= replica < 4
+    assert 0 <= matched <= len(prompt)
+    if matched:
+        assert replica in latest
+        def common(a, b):
+            k = 0
+            while k < min(len(a), len(b)) and a[k] == b[k]:
+                k += 1
+            return k
+        best = max(
+            (common(seq, tuple(prompt)) for seq, _ in latest[replica].prefixes),
+            default=0,
+        )
+        assert best >= matched, (
+            f"routed to replica {replica} whose summary shares only {best} "
+            f"tokens with the prompt (matched_len={matched})"
+        )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    age=st.integers(0, 50),
+    max_age=st.integers(0, 20),
+    prompt=st.lists(st.integers(0, 5), min_size=1, max_size=8),
+    loads=st.tuples(st.integers(0, 9), st.integers(0, 9), st.integers(0, 9)),
+)
+def test_prop_staleness_always_answers_least_loaded(age, max_age, prompt, loads):
+    """However stale the summaries, route() answers (never raises), and once
+    everything is stale the answer is exactly the least-loaded replica."""
+    occ = dict(enumerate(loads))
+    fed = FederatedPrefixIndex(3, occupancy=lambda: occ, max_age=max_age)
+    for r in range(3):
+        fed.apply(_summary(r, t=0, prefixes=[list(prompt)]))
+    replica, matched = fed.route(prompt, now=age)
+    assert 0 <= replica < 3
+    if age > max_age:  # everything aged out
+        assert matched == 0
+        assert replica == min(range(3), key=lambda d: (occ.get(d, 0), d))
+    else:
+        assert matched == len(prompt)

@@ -433,3 +433,66 @@ def test_adaptive_sim_converges_under_oversubscription():
         lock_kwargs={"threshold": 0xFF}, **kw,
     ).run()
     assert r1.ops > 2 * plain.ops
+
+
+# -- controller-coupled shedding (shed-before-spill) ---------------------------
+
+
+def test_shed_home_unwired_is_identity():
+    ctl = AdaptiveController(initial=4)
+    assert ctl.shed_home(2) == 2  # no occupancy/capacity/topology: no-op
+
+
+def test_shed_home_prefers_least_occupied_sibling_never_cross_group():
+    occ = {}
+    ctl = AdaptiveController(initial=4, occupancy=lambda: occ,
+                             domain_capacity=(2, 2, 2, 2), shed_topology=pod(2, 2))
+    # home has headroom: stay
+    occ.update({0: 1, 1: 0, 2: 0, 3: 0})
+    assert ctl.shed_home(0) == 0
+    # home full, sibling (same pod) has room: shed sideways
+    occ.update({0: 2})
+    assert ctl.shed_home(0) == 1
+    # whole pod full: do NOT shed cross-pod — spill pricing owns that move
+    occ.update({1: 2})
+    assert ctl.shed_home(0) == 0
+    # flat topologies make every other domain a sibling
+    ctl2 = AdaptiveController(initial=4, occupancy=lambda: occ,
+                              domain_capacity=(2, 2, 2, 2), shed_topology=flat(4))
+    occ.update({2: 1, 3: 0})
+    assert ctl2.shed_home(0) == 3  # least occupied sibling wins
+
+
+def test_freelists_domain_capacity():
+    fl = DomainFreeLists(10, pod(2, 2))  # 10 slots round-robin over 4 domains
+    assert fl.domain_capacity == (3, 3, 2, 2)
+    assert sum(fl.domain_capacity) == 10
+
+
+def test_shed_before_spill_ordering_over_freelists():
+    """The ROADMAP unlock, at the placement layer: occupancy-coupled
+    shedding re-homes admissions sideways while a sibling has headroom, so
+    nearest_spill only crosses the pod once the whole pod is exhausted —
+    and shed admissions cost no migration at all."""
+    topo = pod(2, 2)
+    fl = DomainFreeLists(8, topo)  # 2 slots per domain
+    tel = PlacementTelemetry(n_domains=4)
+    ctl = AdaptiveController(initial=8, occupancy=lambda: tel.per_domain_occupancy,
+                             domain_capacity=fl.domain_capacity, shed_topology=topo)
+    pol = get_policy("nearest_spill")
+    placed = []
+    for _ in range(5):  # five admissions all homed at domain 0
+        home = ctl.shed_home(0)
+        p = pol.place(fl, home, TWO_SOCKET)
+        tel.record_placement(p)
+        if home != 0:
+            tel.record_shed()
+        placed.append((home, p.slot_domain, p.migration_cycles))
+    homes = [h for h, _, _ in placed]
+    # order: 2 at home, then 2 shed to the sibling, then (pod full) spill
+    assert homes == [0, 0, 1, 1, 0]
+    assert tel.sheds == 2
+    assert [d for _, d, _ in placed[:4]] == [0, 0, 1, 1]
+    assert all(m == 0 for _, _, m in placed[:4])  # shed admissions are local
+    assert placed[4][1] in (2, 3) and placed[4][2] > 0  # cross-pod spill, priced
+    assert tel.cross_spills == 1 and tel.sibling_spills == 0

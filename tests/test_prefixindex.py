@@ -250,3 +250,23 @@ def test_contract_warm_index_matches_oracle_trajectory(small_model):
     # same decode output, and the uncached-suffix discount never charges MORE
     assert {r.rid: r.out for r in test_d} == {r.rid: r.out for r in test_o}
     assert eng_d.sim_time <= eng_o.sim_time
+
+
+def test_summary_exports_distinct_maximal_runs():
+    """summary(top_k) emits hottest-first distinct maximal runs: a path that
+    is a prefix of another emitted path never spends a second slot — the
+    shallower-but-hotter case deepens the chosen entry in place (recording
+    the extension covers every prefix of it)."""
+    ix = PrefixIndex(n_domains=2)
+    ix.record([1, 2, 3, 4], 0)
+    ix.record([1, 2], 0)        # hotter, but subsumed by the deeper run
+    ix.record([9, 9, 9], 1)
+    out = ix.summary(top_k=3)
+    paths = [p for p, _ in out]
+    assert (9, 9, 9) in paths and (1, 2, 3, 4) in paths
+    assert len(paths) == 2      # no slot wasted on (1, 2)
+    assert paths[0] == (9, 9, 9)  # hottest first
+    # top_k bounds the emission; deepening still applies under the bound
+    assert [p for p, _ in ix.summary(top_k=1)] == [(9, 9, 9)]
+    assert ix.summary(top_k=0) == []
+    assert PrefixIndex().summary() == []

@@ -1,0 +1,240 @@
+"""repro.router: the CNA-disciplined replica router, fleet controller, and
+discrete-event fleet sim — including the cross-layer contract that a warm
+federation routes a session to the same replica a global single index
+(oracle) would."""
+
+import random
+
+import pytest
+
+from repro.core.topology import flat, pod
+from repro.router import (
+    FederatedPrefixIndex,
+    FleetController,
+    ReplicaRouter,
+    ReplicaSummary,
+    Session,
+    SimReplica,
+    shared_prefix_sessions,
+    simulate,
+)
+from repro.serving.prefixindex import PrefixIndex
+
+
+def _fleet(n=3, slots=2, budget=400):
+    return [SimReplica(r, slots, cache_budget=budget) for r in range(n)]
+
+
+def _drain_completed(router, replicas):
+    for sess, target, _d in router.dispatch():
+        replicas[target].finish(sess)
+        router.complete(sess, ttft=1)
+
+
+# -- fleet controller ----------------------------------------------------------
+
+
+def test_fleet_controller_caps_inflight_per_replica():
+    fc = FleetController(2, initial=2)
+    assert fc.can_admit(0) and fc.can_admit(1)
+    fc.note_admit(0)
+    fc.note_admit(0)
+    assert not fc.can_admit(0) and fc.can_admit(1)
+    fc.note_finish(0)
+    assert fc.can_admit(0)
+    with pytest.raises(ValueError):
+        fc.note_finish(1)
+
+
+def test_fleet_controller_ttft_collapse_pulls_cap_down():
+    fc = FleetController(1, initial=8, window=8, tolerance=0)
+    for _ in range(8):
+        fc.observe_ttft(0, 10)       # establish the cheap floor
+    for _ in range(64):
+        fc.observe_ttft(0, 10_000)   # TTFT collapse
+    assert fc.cap(0) < 8
+
+
+def test_fleet_controller_validates():
+    with pytest.raises(ValueError):
+        FleetController(0)
+    with pytest.raises(ValueError):
+        FleetController(2, controllers=[None])
+
+
+# -- router admission ----------------------------------------------------------
+
+
+def test_router_routes_to_advertising_replica_and_counts_reuse():
+    reps = _fleet()
+    router = ReplicaRouter(reps, sync_every=0)
+    reps[1].cache.insert((5, 5, 5, 5))
+    router.sync()
+    s = Session(sid=0, prompt=(5, 5, 5, 5, 9), decode_len=2)
+    assert router.submit(s) == 1 and s.matched_len == 4
+    sess, target, _ = router.dispatch_one()
+    assert sess is s and target == 1 and s.replica == 1
+    assert s.local_matched == 4
+    assert router.stats.reprefill_tokens == 1  # only the suffix token
+
+
+def test_router_sheds_to_nearest_when_home_is_full():
+    reps = _fleet(n=4, slots=1)
+    router = ReplicaRouter(reps, topology=pod(2, 2), sync_every=0)
+    reps[0].cache.insert((1, 2, 3))  # only replica 0 advertises the prefix
+    router.sync()
+    reps[0].inflight = 1             # ...but it is full
+    s = Session(sid=0, prompt=(1, 2, 3), decode_len=1)
+    assert router.submit(s) == 0     # longest match still homes it there
+    sess, target, _ = router.dispatch_one()
+    assert sess is s
+    assert target == 1               # same-pod sibling of 0 under pod(2,2)
+    assert router.stats.sheds == 1
+
+
+def test_router_dispatch_stops_when_fleet_is_full():
+    reps = _fleet(n=2, slots=1)
+    router = ReplicaRouter(reps, sync_every=0)
+    for i in range(4):
+        router.submit(Session(sid=i, prompt=(i,), decode_len=1))
+    out = router.dispatch()
+    assert len(out) == 2          # one per slot
+    assert len(router) == 2       # rest wait queued
+    assert router.dispatch_one() is None
+
+
+def test_router_validates_topology_and_controller_size():
+    reps = _fleet(n=3)
+    with pytest.raises(ValueError):
+        ReplicaRouter(reps, topology=flat(2))
+    with pytest.raises(ValueError):
+        ReplicaRouter(reps, controller=FleetController(2))
+    with pytest.raises(ValueError):
+        ReplicaRouter([])
+
+
+def test_router_clusters_dispatches_by_home_replica():
+    """The two-queue semantics one level up: with sessions interleaved
+    across two warm homes, CNA dispatch order clusters same-home sessions
+    (dispatch locality far above the alternation floor)."""
+    reps = _fleet(n=2, slots=2, budget=600)
+    router = ReplicaRouter(reps, sync_every=0, fairness_threshold=0xFF)
+    reps[0].cache.insert((1, 1, 1, 1))
+    reps[1].cache.insert((2, 2, 2, 2))
+    router.sync()
+    sid = 0
+    for _ in range(40):  # strict alternation between the two homes
+        for head in ((1, 1, 1, 1), (2, 2, 2, 2)):
+            router.submit(Session(sid=sid, prompt=head + (900 + sid,), decode_len=1))
+            sid += 1
+        router.tick()
+    # serve with ample capacity churn
+    while len(router):
+        _drain_completed(router, reps)
+        router.tick()
+    m = router.metrics
+    assert m.admitted == 80
+    assert m.locality > 0.8, f"dispatch locality {m.locality:.2f}"
+
+
+# -- the oracle contract (acceptance) ------------------------------------------
+
+
+def test_warm_federation_routes_like_global_index_oracle():
+    """Cross-layer contract: replicas advertise disjoint warm prefixes; for
+    any probe, a warm federation and an oracle holding ONE global index over
+    the same content pick the same replica and matched_len — including the
+    cold-miss fallback, which both resolve least-loaded."""
+    n = 3
+    reps = _fleet(n=n, slots=2)
+    router = ReplicaRouter(reps, sync_every=0)
+    warm = {0: (1, 2, 3, 4, 5), 1: (7, 8, 9), 2: (4, 4, 4, 4)}
+    for r, seq in warm.items():
+        reps[r].cache.insert(seq)
+    router.sync()
+
+    occ = lambda: {r.rid: r.occupancy for r in reps}
+    oracle = PrefixIndex(n_domains=n, occupancy=occ)
+    for r, seq in warm.items():
+        oracle.record(seq, r)
+
+    probes = [
+        (1, 2, 3, 4, 5, 6), (1, 2, 3), (1, 9),        # prefix-0 family
+        (7, 8, 9, 9), (7, 7),                          # prefix-1 family
+        (4, 4, 4, 4, 1), (4, 4),                       # prefix-2 family
+        (6, 6, 6), (),                                  # total misses
+    ]
+    for p in probes:
+        assert router.federation.route(p, now=router.now) == oracle.home(p), p
+    # loads shift the cold-miss fallback identically on both sides
+    reps[0].inflight, reps[1].inflight, reps[2].inflight = 2, 0, 1
+    assert router.federation.route((6, 6, 6)) == oracle.home((6, 6, 6)) == (1, 0)
+
+
+# -- end-to-end sim ------------------------------------------------------------
+
+
+def _mini_workload(n=80, seed=3):
+    rng = random.Random(seed)
+    draws = [rng.randrange(6) for _ in range(n)]
+    return lambda: shared_prefix_sessions(draws, prefix_len=32, suffix_len=8,
+                                          decode_len=8)
+
+
+def test_sim_completes_all_sessions_and_is_deterministic():
+    mk = _mini_workload()
+    a = simulate("federated", mk(), n_replicas=3, n_slots=2, cache_budget=200,
+                 inter_arrival=10, seed=5)
+    b = simulate("federated", mk(), n_replicas=3, n_slots=2, cache_budget=200,
+                 inter_arrival=10, seed=5)
+    assert a.n_sessions == 80 and a.ticks > 0
+    assert (a.reprefill_tokens, a.ticks, a.stall_p99, a.per_replica_served) == (
+        b.reprefill_tokens, b.ticks, b.stall_p99, b.per_replica_served
+    )
+
+
+def test_sim_federated_beats_baselines_on_reprefill():
+    """The bench claim at test scale: with finite per-replica KV memory,
+    federated routing re-prefills fewer tokens than either baseline."""
+    mk = _mini_workload(n=120, seed=9)
+    res = {
+        arm: simulate(arm, mk(), n_replicas=3, n_slots=2, cache_budget=150,
+                      inter_arrival=12, seed=7)
+        for arm in ("federated", "round_robin", "least_loaded")
+    }
+    fed = res["federated"].reprefill_tokens
+    assert fed < res["round_robin"].reprefill_tokens
+    assert fed < res["least_loaded"].reprefill_tokens
+
+
+def test_sim_unknown_arm_raises():
+    with pytest.raises(KeyError):
+        simulate("random", [], n_replicas=2)
+
+
+# -- replica cache (the sim's finite KV model) ---------------------------------
+
+
+def test_replica_cache_budget_evicts_lru_and_charges_suffix_only():
+    from repro.router import ReplicaCache
+
+    c = ReplicaCache(20)
+    assert c.insert((1, 2, 3, 4, 5, 6, 7, 8)) == 8
+    assert c.insert((1, 2, 3, 4, 5, 6, 9, 9)) == 2   # shared prefix: suffix charge
+    assert c.charged_tokens == 10
+    assert c.match((1, 2, 3, 4, 5)) == 5
+    c.insert(tuple(range(100, 112)))                  # 12 tokens: blows the budget
+    assert c.charged_tokens <= 20 or len(c) == 1
+    assert c.match(tuple(range(100, 112))) == 12      # newest entry survives
+
+
+def test_replica_cache_match_refreshes_recency():
+    from repro.router import ReplicaCache
+
+    c = ReplicaCache(16)
+    c.insert((1, 1, 1, 1))
+    c.insert((2, 2, 2, 2))
+    c.match((1, 1, 1, 1))         # touch the older entry
+    c.insert((3, 3, 3, 3, 3, 3, 3, 3, 3, 3))  # forces eviction
+    assert c.match((1, 1)) == 2   # refreshed entry survived
+    assert c.match((2, 2)) == 0   # untouched entry evicted

@@ -264,3 +264,230 @@ def test_topology_scheduler_scales_switch_cost(small_model):
         times[name] = eng.sim_time
         assert eng.scheduler.metrics.domain_switches > 0
     assert times["far"] > times["near"]
+
+
+# -- prefix-KV reuse (matched_len-aware prefill) -------------------------------
+
+
+def test_prefix_kv_store_exact_prefix_lookup_and_lru():
+    from repro.serving.prefixkv import PrefixKVStore
+
+    s = PrefixKVStore(capacity=2)
+    s.put([1, 2, 3], "c123", "l123")
+    s.put([1, 2], "c12", "l12")
+    # longest *exact* prefix wins; a shared run that diverges is not a hit
+    assert s.longest([1, 2, 3, 4]) == (3, "c123", "l123")
+    assert s.longest([1, 2, 9]) == (2, "c12", "l12")
+    assert s.longest([9, 9]) is None
+    assert s.common_run([1, 2, 9]) == 2
+    s.put([7, 7, 7], "c777", "l777")  # capacity 2: LRU ([1,2,3]? no — it was
+    # touched last by the [1,2,3,4] lookup before [1,2] was) evicts oldest
+    assert len(s) == 2
+    with pytest.raises(ValueError):
+        PrefixKVStore(capacity=0)
+
+
+def _greedy_reference_split(model, params, prompt, split, n_new):
+    """Free-running reference that prefills ``prompt[:split]`` and feeds the
+    rest token-by-token — the *incremental* decomposition prefix-KV reuse
+    performs.  (Batched prefill and incremental decode agree only to the
+    bf16 cache resolution, so greedy argmax on a random reduced config can
+    legitimately flip between decompositions; reuse reuses the *identical*
+    stored KV, so it must match the reference with the same split exactly.)"""
+    import jax.numpy as jnp
+
+    pf, st = jax.jit(model.prefill), jax.jit(model.decode_step)
+    if split >= len(prompt):
+        logits, cache = pf(params, {"tokens": jnp.asarray(prompt)[None]})
+    else:
+        logits, cache = pf(params, {"tokens": jnp.asarray(prompt[:split])[None]})
+        for t in prompt[split:]:
+            logits, cache = st(params, cache, jnp.asarray([[int(t)]], jnp.int32))
+    out = [int(jnp.argmax(logits[0]))]
+    for _ in range(n_new - 1):
+        logits, cache = st(params, cache, jnp.asarray([[out[-1]]], jnp.int32))
+        out.append(int(jnp.argmax(logits[0])))
+    return out
+
+
+def test_matched_len_aware_prefill_skips_cached_positions(small_model):
+    """The ROADMAP unlock, pinned by counting prefill positions: with a
+    PrefixKVStore the engine computes each shared prefix once; later prompts
+    sharing it prefill only their suffix — and decode exactly what the
+    incremental reference decodes."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(12)
+    P = rng.integers(0, cfg.vocab, 12).astype(np.int32)
+    prompts = [np.concatenate([P, rng.integers(0, cfg.vocab, 4).astype(np.int32)])
+               for _ in range(3)]
+
+    from repro.core.topology import pod
+
+    eng = DecodeEngine(model, params, n_slots=1, cache_len=64,
+                       topology=pod(1, 2), placement="nearest_spill",
+                       prefix_index=True, prefix_kv=True)
+    reqs = [Request(rid=i, prompt=p, max_new=3, domain=None)
+            for i, p in enumerate(prompts)]
+    eng.run(reqs)
+    # req0: full (16).  req1: no exact-prefix entry yet, but the common run
+    # with the stored full prompt plants the boundary — 12 + 4 computed.
+    # req2: resumes from the boundary — only its 4-token suffix.
+    assert eng.prefill_positions == 16 + 16 + 4
+    assert eng.reused_positions == 12
+    assert eng.prefix_kv.hits == 1
+    splits = {0: 16, 1: 12, 2: 12}  # the decomposition each request ran
+    for r in reqs:
+        ref = _greedy_reference_split(model, params, r.prompt, splits[r.rid], r.max_new)
+        assert r.out[: r.max_new] == ref, f"rid={r.rid}"
+
+
+def test_prefill_reuse_on_conversation_extension(small_model):
+    """A prompt that extends a previously served prompt resumes from its
+    stored cache directly (no boundary planting needed)."""
+    cfg, model, params = small_model
+    rng = np.random.default_rng(13)
+    first = rng.integers(0, cfg.vocab, 10).astype(np.int32)
+    eng = DecodeEngine(model, params, n_slots=1, cache_len=64, prefix_kv=True)
+    r1 = Request(rid=0, prompt=first, max_new=3)
+    eng.run([r1])
+    ext = np.concatenate([first, rng.integers(0, cfg.vocab, 5).astype(np.int32)])
+    r2 = Request(rid=1, prompt=ext, max_new=3)
+    before = eng.prefill_positions
+    eng.run([r2])
+    assert eng.prefill_positions - before == 5        # only the extension
+    ref = _greedy_reference_split(model, params, ext, len(first), r2.max_new)
+    assert r2.out[: r2.max_new] == ref
+
+
+# -- FIFO scheduler kwargs (regression) ----------------------------------------
+
+
+def test_fifo_scheduler_rejects_unknown_kwargs():
+    """Regression: FIFOScheduler(**_) used to swallow anything — a misspelled
+    fairness_threshold= or a controller= silently ran a different experiment."""
+    with pytest.raises(TypeError):
+        FIFOScheduler(fairness_threshold=0xF)
+    with pytest.raises(TypeError):
+        FIFOScheduler(controller=object())
+    with pytest.raises(TypeError):
+        FIFOScheduler(fairness_treshold=3)  # the misspelling, explicitly
+
+
+def test_fifo_scheduler_honours_restriction_kwargs():
+    """The shared GCR knobs are accepted AND honoured: a capped FIFO parks
+    excess arrivals (visible in the queue stats) while preserving FIFO grant
+    order."""
+    s = FIFOScheduler(max_active=2)
+    for i in range(5):
+        s.submit(f"r{i}", i % 2)
+    assert s.max_active == 2
+    assert s._q.stats.parked == 3
+    granted = [s.next_request() for _ in range(5)]
+    assert granted == [f"r{i}" for i in range(5)]  # order unchanged
+    from repro.placement import AdaptiveController
+
+    ctl = AdaptiveController(initial=3)
+    s2 = FIFOScheduler(max_active=ctl)
+    assert s2.controller is ctl and s2.max_active == 3
+    s2.observe_handover(7)
+    assert ctl.samples == 1
+
+
+# -- engine replicas behind the router -----------------------------------------
+
+
+def test_engine_replicas_behind_router(small_model):
+    """End-to-end: two DecodeEngine replicas behind ReplicaRouter — summaries
+    flow to the federation, sessions route and complete, fleet inflight
+    drains to zero, and prefix-KV reuse shows up as skipped prefill."""
+    from repro.core.topology import pod
+    from repro.router import EngineReplica, ReplicaRouter, Session
+
+    cfg, model, params = small_model
+    rng = np.random.default_rng(21)
+    shared = [rng.integers(0, cfg.vocab, 8).astype(np.int32) for _ in range(2)]
+    sessions = [
+        Session(sid=i,
+                prompt=tuple(int(t) for t in np.concatenate(
+                    [shared[i % 2], rng.integers(0, cfg.vocab, 3).astype(np.int32)])),
+                decode_len=2)
+        for i in range(8)
+    ]
+    replicas = [
+        EngineReplica(r, DecodeEngine(
+            model, params, n_slots=2, cache_len=32,
+            scheduler=CNAScheduler(topology=pod(1, 2)),
+            placement="nearest_spill", prefix_index=True, prefix_kv=True))
+        for r in range(2)
+    ]
+    router = ReplicaRouter(replicas, sync_every=2)
+    i = done = 0
+    for _ in range(500):
+        router.tick()
+        if i < len(sessions):
+            router.submit(sessions[i])
+            i += 1
+        router.dispatch()
+        for rep in replicas:
+            for session, ttft in rep.step():
+                assert ttft >= 1
+                router.complete(session, ttft=ttft)
+                done += 1
+        if done == len(sessions):
+            break
+    assert done == len(sessions)
+    assert router.fleet.inflight == [0, 0]
+    assert router.stats.dispatched == len(sessions)
+    assert router.federation.stats.applied >= 2      # summaries flowed
+    served = [r.engine.scheduler.metrics.admitted for r in replicas]
+    assert sum(served) == len(sessions)
+    total_prompt = sum(len(s.prompt) for s in sessions)
+    computed = sum(r.engine.prefill_positions for r in replicas)
+    assert computed < total_prompt                   # real prefill skipped
+    assert all(s.finish_t >= 0 for s in sessions)
+
+
+def test_engine_replica_requires_prefix_index(small_model):
+    from repro.router import EngineReplica
+
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=1, cache_len=32)
+    with pytest.raises(ValueError, match="prefix index"):
+        EngineReplica(0, eng)
+
+
+# -- controller-coupled shedding through the engine ----------------------------
+
+
+def test_engine_auto_wires_controller_shedding(small_model):
+    """Regression for the shed-before-spill ordering at the engine level:
+    with placement + an adaptive controller, the engine wires the
+    controller's occupancy view and a saturated home re-homes new
+    submissions to its same-pod sibling (no migration) before nearest_spill
+    is forced cross-pod."""
+    from repro.core.topology import pod
+    from repro.placement import AdaptiveController
+
+    cfg, model, params = small_model
+    ctl = AdaptiveController(initial=8)
+    eng = DecodeEngine(
+        model, params, n_slots=8, cache_len=32,
+        scheduler=CNAScheduler(topology=pod(2, 2), max_active=ctl),
+        placement="nearest_spill",
+    )
+    assert ctl.occupancy is not None          # auto-wired
+    assert ctl.domain_capacity == (2, 2, 2, 2)
+    assert ctl.shed_topology is eng.scheduler.topology
+    tel = eng.slots.telemetry
+
+    def feed(rid):  # submit homed at 0, admit immediately, never retires
+        r = Request(rid=rid, prompt=np.arange(4, dtype=np.int32), max_new=30, domain=0)
+        eng.submit(r)
+        eng.step()
+        return r
+
+    homes = [feed(i).domain for i in range(5)]
+    assert homes == [0, 0, 1, 1, 0]           # home, home, shed, shed, pod full
+    assert tel.sheds == 2
+    assert tel.cross_spills == 1 and tel.sibling_spills == 0
+    assert tel.migration_cycles > 0           # only the final cross-pod spill
