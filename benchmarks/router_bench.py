@@ -1,4 +1,5 @@
-"""Fleet routing: federated prefix homes vs round-robin / least-loaded.
+"""Fleet routing: federated prefix homes vs round-robin / least-loaded,
+plus priced KV shipping vs shed-and-re-prefill.
 
 The router tier's claim, one level up from the serving scheduler's: on
 shared-prefix Zipf traffic over N decode replicas with finite KV memory,
@@ -11,19 +12,29 @@ CNA-disciplined dispatch, shed-before-stall) beats the standard baselines on
   * p99 admission stall (shorter services -> shorter queues, despite
     concentrating hot prefixes).
 
+``kv_shipping`` sweeps the PR 5 claim on top: letting the router take
+``min(re-prefill, ship)`` per dispatch (``repro.router.kvship``, priced by
+fabric distance and bandwidth, serialized over one fabric pipe) strictly
+reduces total admission-stall cycles (submit -> first token) versus the
+shed-before-stall baseline at the default fabric bandwidth, degrades
+gracefully as bandwidth shrinks (fewer ships, stall rising back toward the
+baseline), and never loses to it — at worst the argmin always picks
+re-prefill and the two runs coincide.
+
 Everything runs on the jax-free discrete-event fleet simulator
 (``repro.router.sim``), so this module sits in the CI smoke lane next to the
-other simulator-backed benches.  A second section checks the federation
-contract: a warm federation (fresh summaries, K >= working set) routes like
-an oracle holding one global index, and syncing *less* often degrades toward
-least-loaded — never below it, and never to an error.
+other simulator-backed benches.  The ``oracle_agreement`` section checks the
+federation contract: a warm federation (fresh summaries, K >= working set)
+routes like an oracle holding one global index, and ``sync_staleness`` shows
+syncing *less* often degrades toward least-loaded — never below it, and
+never to an error.
 """
 
 from __future__ import annotations
 
 import random
 
-from repro.router import shared_prefix_sessions, simulate
+from repro.router import ShipCostModel, shared_prefix_sessions, simulate
 
 from .common import ascii_plot, claim, smoke, table, zipf_draws
 
@@ -162,7 +173,82 @@ def sync_staleness(n_sessions=500, seed=31):
           f"min federated={min(ys):.3f} least_loaded={ll.reuse_fraction:.3f}")
 
 
+def kv_shipping(n_sessions=600, n_replicas=4, n_slots=4, cache_budget=500,
+                n_prefixes=8, prefix_len=96, suffix_len=16, decode_len=32,
+                inter_arrival=16, seed=11,
+                bandwidths=(512, 256, 64, 16, 4)):
+    """Ship-vs-reprefill over fabric bandwidths (bytes/tick).  The baseline
+    arm is PR 4's federated router itself — shed-before-stall, every shed
+    re-prefills — so the sweep isolates exactly what priced shipping adds.
+    The default ``ShipCostModel`` bandwidth (64 B/tick at 64 B/token: one
+    token per tick per hop, vs ``c_prefill`` 4 ticks/token) is the claimed
+    operating point; the low end of the sweep prices shipping *worse* than
+    re-prefill so the argmin must drive ships to zero and the curve must
+    land back on the baseline."""
+    n_sessions = smoke(n_sessions, 150)
+    rng = random.Random(seed)
+    draws = [rng.randrange(n_prefixes) for _ in range(n_sessions)]
+    mk = lambda: shared_prefix_sessions(draws, prefix_len, suffix_len, decode_len)
+    kw = dict(n_replicas=n_replicas, n_slots=n_slots, cache_budget=cache_budget,
+              inter_arrival=inter_arrival, seed=seed)
+    base = simulate("federated", mk(), **kw)
+    default_bw = ShipCostModel().fabric_bytes_per_cycle
+    rows = [["shed_baseline", "-", base.admission_stall_total,
+             base.admission_stall_p99, 0, 0, 0, base.reprefill_tokens]]
+    res = {}
+    for bw in bandwidths:
+        r = simulate("federated", mk(),
+                     kv_ship=ShipCostModel(fabric_bytes_per_cycle=bw), **kw)
+        res[bw] = r
+        rows.append([f"ship@bw={bw}", bw, r.admission_stall_total,
+                     r.admission_stall_p99, r.ships, r.shipped_tokens,
+                     r.reprefill_avoided, r.reprefill_tokens])
+    table(
+        f"kv shipping vs re-prefill ({n_sessions} sessions, {n_replicas} "
+        f"replicas x {n_slots} slots, {prefix_len}-token prefixes, "
+        f"default fabric bw {default_bw} B/tick)",
+        ["arm", "bw_B_per_tick", "stall_total", "stall_p99", "ships",
+         "shipped_tok", "reprefill_avoided", "reprefill_tok"],
+        rows,
+    )
+    xs = list(bandwidths)
+    ascii_plot("admission stall (submit->first token) vs fabric bandwidth",
+               xs,
+               {"kv_ship": [res[bw].admission_stall_total for bw in xs],
+                "shed_baseline": [base.admission_stall_total] * len(xs)})
+    if default_bw not in res:
+        res[default_bw] = simulate(
+            "federated", mk(), kv_ship=ShipCostModel(), **kw)
+    dflt = res[default_bw]
+    claim("kvship: shipping strictly reduces total admission-stall cycles "
+          "at the default fabric bandwidth",
+          dflt.admission_stall_total < base.admission_stall_total
+          and dflt.ships > 0,
+          f"ship={dflt.admission_stall_total} baseline="
+          f"{base.admission_stall_total} ships={dflt.ships}")
+    stalls = [res[bw].admission_stall_total for bw in sorted(res, reverse=True)]
+    claim("kvship: degrades gracefully — stall non-decreasing as bandwidth "
+          "shrinks",
+          all(a <= b for a, b in zip(stalls, stalls[1:])),
+          f"stall by falling bw: {stalls}")
+    claim("kvship: never loses to the shed-before-stall baseline at any "
+          "bandwidth",
+          all(r.admission_stall_total <= base.admission_stall_total
+              for r in res.values()),
+          f"worst={max(r.admission_stall_total for r in res.values())} "
+          f"baseline={base.admission_stall_total}")
+    slowest = min(res)
+    claim("kvship: a fabric slower than re-prefill ships nothing and "
+          "matches the baseline exactly",
+          res[slowest].ships == 0
+          and res[slowest].admission_stall_total == base.admission_stall_total,
+          f"bw={slowest}: ships={res[slowest].ships} "
+          f"stall={res[slowest].admission_stall_total} vs {base.admission_stall_total}")
+    return res
+
+
 def run_all():
     fleet_routing()
     oracle_agreement()
     sync_staleness()
+    kv_shipping()

@@ -15,6 +15,9 @@ can exercise each benchmark's code path in seconds; claims still print but do
 not gate the exit code at smoke scale (the curves need full durations).  In a
 full run, any failed CLAIM makes the process exit 1 so regressions cannot
 scroll by silently.
+
+docs/benchmarks.md documents every section — the claim each bench asserts
+and how to read the ASCII figures.
 """
 
 from __future__ import annotations

@@ -253,7 +253,13 @@ class CNADiscipline:
     arrival.  ``release(holder_domain)`` plays the paper's unlock: it chooses
     the next holder and restructures the queues, returning a ``Grant`` (with
     the transition's satellite events attached) or ``None`` when empty.
-    """
+
+    ``threshold`` is a probability bitmask, not a time or a count:
+    ``keep_lock_local`` succeeds whenever a 30-bit draw ANDs non-zero with
+    it, so 0 = strict FIFO (the MCS limit), 0xF = local-preferred 15/16,
+    0xFFFF = the paper's long-term fairness default (~1 remote flush per
+    65k grants).  The discipline carries no notion of cycles or ticks —
+    costs are the *drivers'* concern; it only ever compares domains."""
 
     def __init__(
         self,

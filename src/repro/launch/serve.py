@@ -12,7 +12,10 @@ has something to match.  ``--replicas N`` runs the router tier instead: N
 engine replicas behind ``repro.router.ReplicaRouter`` — federated prefix
 summaries steer each session to the replica already holding its prefix, and
 per-engine ``PrefixKVStore`` reuse turns the steering into skipped prefill
-positions (printed per replica).
+positions (printed per replica).  KV shipping is on by default in the fleet
+demo (``--no-kv-ship`` reverts to shed-and-re-prefill): every priced
+ship-vs-reprefill decision prints one ``[ship?]`` line — the runnable
+companion to docs/architecture.md's router walkthrough.
 """
 
 from __future__ import annotations
@@ -50,6 +53,9 @@ def main(argv=None) -> int:
                          "tier (repro.router) instead of a single engine")
     ap.add_argument("--sync-every", type=int, default=4,
                     help="router ticks between federation summary syncs")
+    ap.add_argument("--no-kv-ship", action="store_true",
+                    help="disable priced prefix-KV shipping in the fleet "
+                         "demo (PR 4's shed-and-re-prefill behaviour)")
     args = ap.parse_args(argv)
 
     if args.replicas > 1:
@@ -154,7 +160,8 @@ def serve_fleet(args) -> int:
         ))
         for r in range(args.replicas)
     ]
-    router = ReplicaRouter(replicas, sync_every=args.sync_every)
+    router = ReplicaRouter(replicas, sync_every=args.sync_every,
+                           kv_ship=not args.no_kv_ship)
 
     t0 = time.time()
     i = done = 0
@@ -163,7 +170,19 @@ def serve_fleet(args) -> int:
         if i < len(sessions):
             router.submit(sessions[i])
             i += 1
-        router.dispatch()
+        for session, target, _dist in router.dispatch():
+            d = session.ship
+            if d is not None:
+                # one line per priced decision, the docs walkthrough's
+                # runnable companion: what the argmin saw and what happened
+                outcome = d.choice
+                if d.choice == "ship" and not d.executed:
+                    outcome = "ship (refused -> reprefill)"
+                print(f"  [ship?] sid={session.sid} home={session.home} -> "
+                      f"replica {target}: src={d.src} holds {d.src_matched} "
+                      f"tok (target {d.local_matched}); "
+                      f"ship={d.ship_total}cy vs reprefill="
+                      f"{d.reprefill_cycles}cy -> {outcome}")
         for rep in replicas:
             for session, ttft in rep.step():
                 router.complete(session, ttft=ttft)
@@ -174,7 +193,8 @@ def serve_fleet(args) -> int:
     print(f"[router] replicas={args.replicas} sessions={len(sessions)} "
           f"reuse_frac={s.reuse_fraction:.2f} hit_rate={s.hit_rate:.2f} "
           f"reprefill_tokens={s.reprefill_tokens}/{s.routed_tokens} "
-          f"sheds={s.sheds} syncs={s.syncs} "
+          f"sheds={s.sheds} ships={s.ships} shipped_tok={s.shipped_tokens} "
+          f"reprefill_avoided={s.reprefill_avoided} syncs={s.syncs} "
           f"dispatch_locality={router.metrics.locality:.2f} wall={wall:.1f}s")
     for rep in replicas:
         eng = rep.engine

@@ -52,7 +52,16 @@ from dataclasses import dataclass, field
 
 @dataclass
 class AdaptiveController:
-    """Adaptive ``max_active`` from an EWMA of observed handover latency."""
+    """Adaptive ``max_active`` from observed handover latencies.
+
+    Scale-free by design: samples are whatever unit the driver charges in
+    (cycles in the lock simulator, scheduler ticks in the serving engine,
+    router ticks in the fleet controller) — only *ratios* against the
+    tracked floor matter.  The shrink decision is **windowed stall counts**
+    (``window`` samples, ``tolerance`` forgiven); the EWMA does not shrink
+    anything — it only *gates growth*, so a stall-free window cannot raise
+    the cap while a collapse episode still dominates the smoothed average.
+    ``cap`` is a count of concurrently active waiters/admissions."""
 
     initial: int = 8
     min_active: int = 1

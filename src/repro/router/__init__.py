@@ -13,11 +13,15 @@ single-engine scheduler already share:
   ``replica``      the replica protocol: ``EngineReplica`` (a real
                    ``DecodeEngine``) and ``FleetController`` (per-replica
                    TTFT-driven admission caps — GCR at fleet granularity);
+  ``kvship``       priced prefix-KV shipping: ``min(re-prefill, ship)`` per
+                   dispatch, charged as admission stall, serialized over a
+                   finite-bandwidth ``Fabric``;
   ``sim``          jax-free discrete-event fleet simulator + control arms
                    (round-robin, least-loaded) for the benchmarks.
 """
 
 from .federation import FederatedPrefixIndex, FederationStats, ReplicaSummary
+from .kvship import Fabric, ShipCostModel, ShipDecision, ShipStats, decide
 from .replica import EngineReplica, FleetController
 from .router import ReplicaRouter, RouterStats, Session
 from .sim import (
@@ -32,6 +36,7 @@ from .sim import (
 
 __all__ = [
     "EngineReplica",
+    "Fabric",
     "FederatedPrefixIndex",
     "FederationStats",
     "FleetController",
@@ -42,7 +47,11 @@ __all__ = [
     "ReplicaSummary",
     "RouterStats",
     "Session",
+    "ShipCostModel",
+    "ShipDecision",
+    "ShipStats",
     "SimReplica",
+    "decide",
     "make_router",
     "shared_prefix_sessions",
     "simulate",

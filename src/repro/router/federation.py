@@ -76,8 +76,10 @@ class FederatedPrefixIndex:
     map (the router wires it to replica telemetry); without one, the last
     summaries' occupancy plus a steered-since-summary delta is used, so the
     tie-break never reads stale load without correction.  ``max_age`` (in
-    router-clock units) bounds how long a silent replica's summary keeps
-    attracting traffic; ``None`` trusts summaries forever.
+    router-clock ticks, the unit of every ``now``/``t`` here) bounds how
+    long a silent replica's summary keeps attracting traffic; ``None``
+    trusts summaries forever.  All ``matched*`` quantities are token
+    counts over the prompt's token sequence.
     """
 
     def __init__(
@@ -177,6 +179,38 @@ class FederatedPrefixIndex:
             self.stats.matched_tokens += matched
         assert replica is not None  # n_domains is set: fallback always answers
         return replica, matched
+
+    def holders(self, prompt, now: int = 0) -> dict[int, int]:
+        """Per-replica longest advertised prefix of ``prompt`` (lengths in
+        tokens) from the live merged summaries — the discovery view behind
+        ship-source selection.  A summary's token runs *are* the
+        advertisement of what the replica could ship, so this prices remote
+        holdings without touching any replica; advertised lengths may trail
+        a replica's live store (staleness) — callers re-confirm with the
+        source before reserving the fabric.  Read-only."""
+        return self._ensure(now).holders(prompt)
+
+    def shippable(
+        self, prompt, now: int = 0, exclude: int | None = None
+    ) -> tuple[int | None, int]:
+        """Best ship *source* for ``prompt`` by advertised length alone: the
+        replica (never ``exclude``, normally the dispatch target itself)
+        whose summaries cover the longest run -> ``(replica, matched_len)``,
+        equal lengths tie toward the least-loaded holder; ``(None, 0)`` when
+        no other replica advertises a single matching token.  NB the router
+        itself selects over ``holders()`` with a *fabric-distance* tie-break
+        instead — source load is irrelevant to a ship (an export copies
+        references), while source->target distance multiplies the priced
+        bytes; this load-based form remains for callers with no topology."""
+        best_r, best_m = None, 0
+        for r, m in self.holders(prompt, now).items():
+            if r == exclude or m <= 0:
+                continue
+            if m > best_m or (
+                m == best_m and best_r is not None and self.load(r) < self.load(best_r)
+            ):
+                best_r, best_m = r, m
+        return best_r, best_m
 
     def holder_summary(self, replica: int) -> ReplicaSummary | None:
         """The summary currently on file for ``replica`` (tests/telemetry)."""

@@ -1,0 +1,240 @@
+"""Priced prefix-KV shipping: ``min(re-prefill, ship)`` across the fabric.
+
+PR 4's router sheds a session off its warm replica whenever that replica is
+saturated — and the shed session then re-prefills its whole prefix from
+scratch on the target, even though some other replica's ``PrefixKVStore``
+still holds the prefilled cache.  That is the paper's remote cache miss paid
+at fleet scale: the data exists, it is just far away.  The paper's answer is
+not "never go remote" but "price the move" — ``Topology.xfer_cycles`` already
+charges lock handovers by fabric distance, and this module applies the same
+distance-pricing to KV bytes:
+
+    reprefill_cycles = c_prefill * (prompt_len - local_matched)
+    ship_cycles      = c_ship_setup
+                       + ceil(src_matched * kv_bytes_per_token * distance
+                              / fabric_bytes_per_cycle)
+    ship_total       = wait_cycles (fabric backlog) + ship_cycles
+                       + c_prefill * (prompt_len - src_matched)
+
+and the router takes the argmin, charging the winner as admission stall.
+All quantities are integers: ``*_cycles``/``wait``/``setup`` are router-clock
+ticks (the same unit ``FleetCostModel`` charges), ``*_matched``/``prompt_len``
+are token counts, ``kv_bytes_per_token``/``fabric_bytes_per_cycle`` are bytes.
+
+Three pieces:
+
+  * ``ShipCostModel`` — the pricing constants.  ``c_prefill`` must equal the
+    serving cost model's per-token prefill charge (``FleetCostModel
+    .c_prefill`` in the fleet sim) or the argmin is priced against a
+    different machine than the one that executes it; ``repro.router.sim``
+    re-pins it with ``dataclasses.replace`` for exactly that reason.
+  * ``decide()`` — the pure pricing function.  Deterministic, jax-free, and
+    the single place the ship/re-prefill boundary lives: the property test
+    (tests/test_kvship.py) pins ``choice == argmin`` over arbitrary inputs.
+  * ``Fabric`` — the serialized transfer pipe.  In-flight ships queue behind
+    one another (``busy_until``), and the backlog is folded into the *price*
+    of the next decision as ``wait_cycles`` — a congested fabric makes
+    re-prefill win, which is the graceful-degradation half of the bench
+    claim (``benchmarks/router_bench.py::kv_shipping``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ShipCostModel:
+    """Constants pricing a prefix-KV transfer against a re-prefill.
+
+    Units: ``kv_bytes_per_token`` bytes of KV per prompt token (all layers);
+    ``fabric_bytes_per_cycle`` bytes the fabric moves per router-clock tick
+    (the bandwidth knob the bench sweeps); ``c_ship_setup`` ticks of fixed
+    per-transfer cost (rendezvous + registration); ``c_prefill`` ticks per
+    prompt token recomputed — keep it equal to the serving cost model's
+    prefill charge so the argmin prices the machine that actually runs.
+    ``min_ship_tokens`` floors how small a prefix is worth a transfer
+    (tiny prefixes re-prefill faster than any setup)."""
+
+    kv_bytes_per_token: int = 64
+    fabric_bytes_per_cycle: int = 64
+    c_ship_setup: int = 8
+    c_prefill: int = 4
+    min_ship_tokens: int = 4
+
+    def xfer_cycles(self, tokens: int, distance: int) -> int:
+        """Fabric ticks to move ``tokens`` tokens of KV over ``distance``
+        replica-topology hops (distance 1 = same group, 2 = cross group —
+        the ladder ``Topology.distance`` answers); setup included."""
+        if tokens <= 0:
+            return 0
+        nbytes = tokens * self.kv_bytes_per_token * max(1, distance)
+        return self.c_ship_setup + -(-nbytes // self.fabric_bytes_per_cycle)
+
+
+@dataclass
+class ShipDecision:
+    """One priced ship/re-prefill choice (all cycle fields in router ticks).
+
+    ``local_matched`` is what the *target* replica's store already holds of
+    the prompt; ``src_matched`` what the source replica could ship; both in
+    tokens.  ``wait_cycles`` is the fabric backlog at decision time,
+    ``ship_cycles`` the transfer itself (setup + bytes/bandwidth x distance),
+    ``suffix_cycles``/``reprefill_cycles`` the prefill work remaining after a
+    ship vs after no ship.  ``choice`` is the argmin of ``ship_total`` vs
+    ``reprefill_cycles`` (ties go to re-prefill: no fabric traffic for zero
+    gain) and is never rewritten afterwards — audits recompute it from the
+    recorded prices.  ``executed`` says whether a chosen ship actually ran
+    (False when the export or import was refused and the dispatch fell back
+    to re-prefill); ``fabric_end`` is filled by ``Fabric.reserve`` when the
+    transfer is scheduled (-1 until then)."""
+
+    src: int
+    dst: int
+    distance: int
+    prompt_len: int
+    local_matched: int
+    src_matched: int
+    wait_cycles: int
+    ship_cycles: int
+    suffix_cycles: int
+    reprefill_cycles: int
+    choice: str = "reprefill"      # "ship" | "reprefill"
+    executed: bool = False
+    fabric_end: int = -1
+
+    @property
+    def ship_total(self) -> int:
+        """Full cost of the ship path in ticks: queue behind in-flight
+        ships, transfer, then prefill the unshipped suffix."""
+        return self.wait_cycles + self.ship_cycles + self.suffix_cycles
+
+    @property
+    def saved_cycles(self) -> int:
+        """Ticks of admission stall the chosen path saves vs re-prefill
+        (0 when re-prefill won)."""
+        return max(0, self.reprefill_cycles - self.ship_total) if self.choice == "ship" else 0
+
+
+def decide(
+    *,
+    prompt_len: int,
+    local_matched: int,
+    src_matched: int,
+    src: int,
+    dst: int,
+    distance: int,
+    backlog: int = 0,
+    cm: ShipCostModel | None = None,
+) -> ShipDecision:
+    """Price shipping ``src``'s ``src_matched``-token prefix to ``dst``
+    against re-prefilling from ``dst``'s own ``local_matched`` tokens, and
+    pick the cheaper (strictly — ties re-prefill).  Pure function of its
+    arguments; ``backlog`` is the fabric's current queue in ticks.
+
+    A ship shorter than ``cm.min_ship_tokens``, or one that would not extend
+    what the target already holds (``src_matched <= local_matched``), is
+    never taken regardless of price."""
+    cm = cm or ShipCostModel()
+    if prompt_len < 0 or not 0 <= local_matched <= prompt_len:
+        raise ValueError("need 0 <= local_matched <= prompt_len")
+    if not 0 <= src_matched <= prompt_len:
+        raise ValueError("need 0 <= src_matched <= prompt_len")
+    ship_cycles = cm.xfer_cycles(src_matched, distance)
+    d = ShipDecision(
+        src=src,
+        dst=dst,
+        distance=distance,
+        prompt_len=prompt_len,
+        local_matched=local_matched,
+        src_matched=src_matched,
+        wait_cycles=max(0, int(backlog)),
+        ship_cycles=ship_cycles,
+        suffix_cycles=cm.c_prefill * (prompt_len - src_matched),
+        reprefill_cycles=cm.c_prefill * (prompt_len - local_matched),
+    )
+    if (
+        src_matched > local_matched
+        and src_matched >= cm.min_ship_tokens
+        and d.ship_total < d.reprefill_cycles
+    ):
+        d.choice = "ship"
+    return d
+
+
+@dataclass
+class ShipStats:
+    """Fabric-side telemetry — pricing and transfer outcomes as the *pipe*
+    saw them (tokens in tokens, cycles in router ticks).  Routing-level
+    outcomes that the fabric cannot see — re-prefill tokens avoided,
+    export/import refusals after a chosen ship — live on ``RouterStats``."""
+
+    priced: int = 0                # decisions priced (both outcomes)
+    declined: int = 0              # priced, re-prefill won the argmin
+    ships: int = 0                 # transfers actually scheduled
+    shipped_tokens: int = 0        # tokens moved across the fabric
+    ship_cycles: int = 0           # transfer ticks spent (setup + bytes)
+    wait_cycles: int = 0           # ticks ships queued behind the pipe
+
+
+class Fabric:
+    """The serialized KV-transfer pipe between replicas.
+
+    One transfer at a time (``busy_until`` in router ticks): concurrent ships
+    queue, and ``price`` folds the queue into the next decision's
+    ``wait_cycles`` so the argmin sees the fabric as it is, not as an ideal
+    infinite-bandwidth link.  ``topology`` is the *replica-level* topology —
+    the same object the router disciplines dispatch over — so ship distance
+    and dispatch-steering distance live on one ladder."""
+
+    def __init__(self, topology, cm: ShipCostModel | None = None) -> None:
+        self.topology = topology
+        self.cm = cm or ShipCostModel()
+        self.busy_until = 0
+        self.stats = ShipStats()
+
+    def backlog(self, now: int) -> int:
+        """Ticks a transfer starting at ``now`` would wait for the pipe."""
+        return max(0, self.busy_until - now)
+
+    def price(
+        self, *, prompt_len: int, local_matched: int, src_matched: int,
+        src: int, dst: int, now: int,
+    ) -> ShipDecision:
+        """One priced decision at router time ``now`` (backlog included)."""
+        d = decide(
+            prompt_len=prompt_len,
+            local_matched=local_matched,
+            src_matched=src_matched,
+            src=src,
+            dst=dst,
+            distance=self.topology.distance(src, dst),
+            backlog=self.backlog(now),
+            cm=self.cm,
+        )
+        self.stats.priced += 1
+        if d.choice != "ship":
+            self.stats.declined += 1
+        return d
+
+    def projected_end(self, now: int, d: ShipDecision) -> int:
+        """The tick ``d``'s transfer would complete if reserved at ``now``
+        — what ``reserve`` will return, computable before committing (so
+        callers can embargo an imported bundle first and only then book)."""
+        return max(now, self.busy_until) + d.ship_cycles
+
+    def reserve(self, now: int, d: ShipDecision) -> int:
+        """Schedule ``d``'s transfer: occupy the pipe for its ship cycles
+        after any backlog, book the stats, and return (also record on the
+        decision) the tick the shipped KV is resident at the target."""
+        if d.choice != "ship":
+            raise ValueError("only a choice='ship' decision can reserve the fabric")
+        start = max(now, self.busy_until)
+        self.busy_until = start + d.ship_cycles
+        d.fabric_end = self.busy_until
+        s = self.stats
+        s.ships += 1
+        s.shipped_tokens += d.src_matched
+        s.ship_cycles += d.ship_cycles
+        s.wait_cycles += start - now
+        return d.fabric_end

@@ -2,7 +2,11 @@
 
 A *replica* is anything the router can steer sessions to.  The protocol is
 four members — ``capacity``, ``occupancy``, ``admit(session, now)`` and
-``summary(top_k, now)`` — implemented here for a real ``DecodeEngine``
+``summary(top_k, now)`` — plus three KV-shipping hooks the router uses only
+when shipping is enabled: ``peek_match(prompt)`` (tokens of the prompt the
+replica's store holds, side-effect-free, for pricing),
+``export_kv(prompt) -> (tokens, payload) | None`` and
+``import_kv(tokens, payload)``.  Implemented here for a real ``DecodeEngine``
 (``EngineReplica``) and in ``repro.router.sim`` for the jax-free fleet
 simulator (``SimReplica``), so the router, federation, and benchmarks run
 identically over either.
@@ -122,11 +126,17 @@ class EngineReplica:
         )
 
     def admit(self, session, now: int) -> int:
-        """Submit the steered session into the engine; returns the engine
-        index's matched_len for the prompt (the replica's actual cached
-        prefix, which is what re-prefill accounting must count)."""
+        """Submit the steered session into the engine; returns the tokens of
+        the prompt this replica already holds — what re-prefill accounting
+        must count.  That is the *max* of the prefix index's matched_len
+        (metadata: which pool is warm) and the prefix-KV store's resumable
+        run (actual prefilled bytes, including just-shipped bundles): the
+        index knows nothing of imported bundles and zeroes its match on an
+        intra-engine shed, so counting it alone would book shipped tokens
+        as re-prefilled while the router books them as avoided."""
         from repro.serving.engine import Request
 
+        resumable = self.engine.peek_match(session.prompt)
         req = Request(
             rid=session.sid,
             prompt=list(session.prompt),
@@ -135,12 +145,39 @@ class EngineReplica:
         )
         self.engine.submit(req)
         self._live[session.sid] = (session, req)
-        return req.matched_len
+        return max(req.matched_len, resumable)
+
+    # -- KV shipping hooks (repro.router.kvship) -------------------------------
+    def peek_match(self, prompt, now: int = 0) -> int:
+        """Tokens of ``prompt`` the engine's prefix-KV store could resume
+        from (0 when the engine runs no store) — ship-pricing input.
+        ``now`` is part of the protocol for the sim's in-flight-transfer
+        embargo; a real engine's store has no router clock to consult."""
+        return self.engine.peek_match(prompt)
+
+    def export_kv(self, prompt):
+        """Export the engine's longest stored prefix cache for ``prompt``
+        (``(tokens, (cache, logits))`` of immutable jax arrays, or None).
+        Replicas in one fleet serve the same model, so the bundle is
+        shape-compatible with any sibling's ``import_kv``."""
+        return self.engine.export_kv(prompt)
+
+    def import_kv(self, tokens, payload, ready_t: int = 0) -> bool:
+        """Deposit a shipped bundle into the engine's store; the steered
+        session's admission then resumes from it via the ordinary
+        prefill-reuse path (counted in ``reused_positions``).  ``ready_t``
+        is the sim-side delivery embargo; an in-process engine receives the
+        references immediately.  False means the bundle was refused (no
+        store, or it cannot fit this engine's cache) — the caller must fall
+        back to re-prefill and book nothing."""
+        return self.engine.import_kv(tokens, payload)
 
     def step(self) -> list[tuple]:
         """One engine tick; returns ``(session, ttft)`` pairs for sessions
-        that retired this tick.  TTFT is the engine-clock ticks from submit
-        to the admission that produced the first token."""
+        that retired this tick.  TTFT is engine-clock ticks from submit to
+        admission plus one (the admission's prefill emits the first token
+        on that following tick), floored at 1 — the sample the fleet
+        controller's GCR loop consumes."""
         self.engine.step()
         done = []
         for sid, (session, req) in list(self._live.items()):

@@ -32,7 +32,11 @@ a lock does not:
   * shed-before-stall — when the granted session's home replica is
     saturated, the dispatch sheds to the nearest replica (by the replica
     topology) with headroom instead of stalling the pipe, mirroring the
-    placement layer's shed-before-spill.
+    placement layer's shed-before-spill;
+  * priced KV shipping (``kv_ship=``) — a dispatch whose target lacks a
+    prefix some other replica still holds prices ``min(re-prefill, ship)``
+    over the fabric (``repro.router.kvship``) and moves the stored bundle
+    when shipping wins, so a shed stops implying a full re-prefill.
 """
 
 from __future__ import annotations
@@ -43,12 +47,19 @@ from repro.core.topology import Topology, flat, get_topology
 from repro.serving.scheduler import CNAScheduler
 
 from .federation import FederatedPrefixIndex
+from .kvship import Fabric, ShipCostModel, ShipDecision
 from .replica import FleetController
 
 
 @dataclass
 class Session:
-    """One routed unit of work: a prompt plus decode budget."""
+    """One routed unit of work: a prompt plus decode budget.
+
+    Times (``submit_t``/``dispatch_t``/``finish_t``) are router-clock ticks;
+    ``matched_len``/``local_matched`` are token counts.  ``ship`` carries the
+    priced KV-ship decision for this dispatch when the router ran one
+    (either outcome — tests recompute the argmin from it), None when
+    shipping is off or nothing was worth pricing."""
 
     sid: int
     prompt: tuple
@@ -58,8 +69,9 @@ class Session:
     finish_t: int = -1
     home: int | None = None       # federation-routed replica
     replica: int | None = None    # where it actually landed (after shedding)
-    matched_len: int = 0          # federation's believed cached prefix
-    local_matched: int = 0        # target replica's actual cached prefix
+    matched_len: int = 0          # federation's believed cached prefix (tokens)
+    local_matched: int = 0        # target replica's actual cached prefix (tokens)
+    ship: ShipDecision | None = None
 
     @property
     def stall(self) -> int:
@@ -78,6 +90,15 @@ class RouterStats:
     routed_tokens: int = 0        # recompute, vs all routed prompt tokens
     local_hits: int = 0           # dispatches whose target held >=1 token
     stalls: list = field(default_factory=list)
+    # KV shipping (repro.router.kvship); tokens in tokens, cycles in router
+    # ticks.  reprefill_avoided counts prompt tokens the target would have
+    # recomputed had the shipped prefix not arrived first.
+    ships: int = 0
+    ship_declined: int = 0        # argmin chose re-prefill (price, not failure)
+    ship_failed: int = 0          # argmin chose ship, but export/import refused
+    shipped_tokens: int = 0
+    ship_cycles: int = 0
+    reprefill_avoided: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -93,10 +114,16 @@ class RouterStats:
 class ReplicaRouter:
     """Front N replicas as top-level locality domains.
 
-    ``replicas`` implement the small replica protocol (``repro.router
-    .replica``): ``capacity``, ``occupancy``, ``has_capacity()``,
-    ``admit(session, now) -> matched_len`` and ``summary(top_k, now)``.
-    """
+    ``replicas`` implement the replica protocol (``repro.router.replica``):
+    ``capacity``, ``occupancy``, ``has_capacity()``,
+    ``admit(session, now) -> matched_len`` and ``summary(top_k, now)``;
+    with ``kv_ship`` enabled they additionally need the shipping hooks
+    ``peek_match`` / ``export_kv`` / ``import_kv``.
+
+    Units: the router clock (``now``, ``Session.submit_t``/``dispatch_t``,
+    every ``*_cycles`` stat) counts router ticks — the same unit the fleet
+    simulator's ``FleetCostModel`` charges; ``matched_len`` /
+    ``*_tokens`` count prompt tokens."""
 
     def __init__(
         self,
@@ -109,6 +136,7 @@ class ReplicaRouter:
         top_k: int = 8,
         max_age: int | None = None,
         controller: FleetController | None = None,
+        kv_ship: "bool | ShipCostModel | None" = None,
     ) -> None:
         self.replicas = list(replicas)
         n = len(self.replicas)
@@ -144,6 +172,14 @@ class ReplicaRouter:
         self.top_k = top_k
         self.stats = RouterStats()
         self._last_target = 0  # where the dispatch pipe currently points
+        # kv_ship: price shipping a remote replica's stored prefix KV to the
+        # dispatch target against re-prefilling it there, and take the argmin
+        # (repro.router.kvship).  True -> default ShipCostModel; a
+        # ShipCostModel instance sets the pricing; None/False -> off (PR 4's
+        # shed-before-stall behaviour, every shed re-prefills).
+        if kv_ship is True:
+            kv_ship = ShipCostModel()
+        self.fabric = Fabric(topo, kv_ship) if kv_ship else None
 
     # -- clock -----------------------------------------------------------------
     @property
@@ -235,6 +271,7 @@ class ReplicaRouter:
         self._last_target = target
         session.replica = target
         session.dispatch_t = self.now
+        session.ship = self._maybe_ship(session, target)
         # admit first: if the replica rejects (raises), the fleet controller
         # must not be left with a phantom in-flight admission nobody will
         # ever note_finish
@@ -247,6 +284,84 @@ class ReplicaRouter:
             self.stats.local_hits += 1
         self.stats.stalls.append(session.stall)
         return session, target, dist
+
+    def _maybe_ship(self, session: Session, target: int) -> "ShipDecision | None":
+        """Price moving a remote replica's stored prefix KV to ``target``
+        before admitting ``session`` there; execute the transfer when it wins
+        the argmin.  Returns the decision (either outcome) or None when
+        shipping is off / nothing beyond the target's own holding exists.
+
+        Discovery runs on the federation's advertised lengths (stale-able),
+        but the price uses the source's *live* store (``peek_match``) — a
+        summary that over-promises must not buy fabric time.  On a ship the
+        source exports its stored bundle and the target imports it before
+        ``admit`` runs, so the target's ordinary prefill-reuse path finds
+        the prefix as if it had computed it locally."""
+        if self.fabric is None or not len(session.prompt):
+            return None
+        prompt = session.prompt
+        local = self.replicas[target].peek_match(prompt, self.now)
+        # source selection: longest advertised holding first, then *nearest
+        # to the target* — distance multiplies the priced bytes, so between
+        # equal holders the far one can flip the argmin to re-prefill and
+        # lose a profitable ship; source load is irrelevant (an export
+        # copies references, it does not occupy the source)
+        candidates = [
+            (m, r)
+            for r, m in self.federation.holders(prompt, now=self.now).items()
+            if r != target and m > local
+        ]
+        if not candidates:
+            return None
+        src = min(
+            candidates,
+            key=lambda mr: (-mr[0], self.topology.distance(mr[1], target), mr[1]),
+        )[1]
+        actual = self.replicas[src].peek_match(prompt, self.now)
+        if actual <= local:
+            return None
+        d = self.fabric.price(
+            prompt_len=len(prompt),
+            local_matched=local,
+            src_matched=actual,
+            src=src,
+            dst=target,
+            now=self.now,
+        )
+        if d.choice != "ship":
+            self.stats.ship_declined += 1
+            return d
+        # from here the argmin chose ship; a refusal below is a *failure*
+        # (ship_failed), not a price decline, and the dispatch falls back to
+        # re-prefill with d.choice untouched (executed stays False) so the
+        # recorded prices still audit against the recorded choice
+        exported = self.replicas[src].export_kv(prompt)
+        if exported is None:        # store churned between peek and export
+            self.stats.ship_failed += 1
+            return d
+        tokens, payload = exported
+        # import before booking anything: a target that refuses the bundle
+        # (no store, cache_len too small) must leave no fabric reservation
+        # and no phantom ship counters behind — it just re-prefills.  The
+        # bundle is embargoed until the projected transfer end, which equals
+        # what reserve() will book (nothing else touches the fabric between).
+        if not self.replicas[target].import_kv(
+            tokens, payload, ready_t=self.fabric.projected_end(self.now, d)
+        ):
+            self.stats.ship_failed += 1
+            return d
+        self.fabric.reserve(self.now, d)
+        d.executed = True
+        # NB: ship effects necessarily precede admit() (the import is what
+        # admit's prefill reuse must see); the headroom check above is what
+        # keeps admit from raising, so an exception here means a replica
+        # broke the has_capacity contract — the dispatch is already lost.
+        s = self.stats
+        s.ships += 1
+        s.shipped_tokens += len(tokens)
+        s.ship_cycles += d.ship_cycles
+        s.reprefill_avoided += len(tokens) - local
+        return d
 
     def dispatch(self) -> list[tuple[Session, int, int]]:
         """Drain dispatches until out of queue or headroom."""

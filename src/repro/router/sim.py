@@ -90,6 +90,12 @@ class ReplicaCache:
             self._touch(best_key)
         return best
 
+    def peek(self, tokens) -> int:
+        """``match`` without the LRU touch — the router's ship pricing reads
+        this, and a price probe must not refresh an entry's recency."""
+        key = tuple(tokens)
+        return max((self._common(seq, key) for seq in self._lru), default=0)
+
     def _touch(self, key: tuple) -> None:
         self._lru.move_to_end(key)
         self._stamp += 1
@@ -130,6 +136,9 @@ class SimReplica:
         self.inflight = 0
         self.served = 0
         self.reprefill_tokens = 0
+        # shipped prefixes in flight: (ready_t, tokens), invisible to match/
+        # peek until the fabric delivers them (see import_kv)
+        self._pending: list[tuple[int, tuple]] = []
 
     @property
     def capacity(self) -> int:
@@ -156,12 +165,69 @@ class SimReplica:
         suffix is (re-)prefilled and enters this replica's cache."""
         if not self.has_capacity():
             raise ValueError(f"replica {self.rid} is full")
+        ship = getattr(session, "ship", None)
+        if ship is not None and ship.executed:
+            # the shipping session's own prefill starts no earlier than its
+            # transfer completes (the sim holds its first token until
+            # fabric_end), so everything delivered by then is legitimately
+            # reusable for this session.  NB: like every admit, the line
+            # below then inserts the *whole prompt* optimistically — the
+            # sim's uniform model (all arms, shipping or not) is that a
+            # session's KV is visible from admission even though its
+            # prefill finishes later, so the embargo protects imports that
+            # are not immediately followed by the importer's admission
+            # (e.g. a future prefetch path), not racers arriving after it.
+            self._deliver(ship.fabric_end)
+        else:
+            self._deliver(now)
         self.inflight += 1
         matched = self.cache.match(session.prompt)
         self.cache.insert(session.prompt)
         self.served += 1
         self.reprefill_tokens += len(session.prompt) - matched
         return matched
+
+    # -- KV shipping hooks (repro.router.kvship) -------------------------------
+    def _deliver(self, now: int) -> None:
+        """Land every in-flight shipped prefix whose transfer has completed
+        by ``now`` — until then shipped KV is *not* reusable, so a second
+        session racing the fabric cannot time-travel onto bytes that have
+        not arrived."""
+        if not self._pending:
+            return
+        still = []
+        for ready_t, tokens in self._pending:
+            if ready_t <= now:
+                self.cache.insert(tokens)
+            else:
+                still.append((ready_t, tokens))
+        self._pending = still
+
+    def peek_match(self, prompt, now: int = 0) -> int:
+        """Tokens of ``prompt`` this replica's cache holds at ``now``,
+        without touching recency — what the router prices a ship decision
+        against.  In-flight (undelivered) ships do not count."""
+        self._deliver(now)
+        return self.cache.peek(prompt)
+
+    def export_kv(self, prompt):
+        """Export the cached prefix of ``prompt`` for a fabric transfer ->
+        ``(tokens, payload)`` or None when nothing matches.  In the sim the
+        KV bytes are implied by the token run (payload None); the engine
+        replica ships the actual cache bundle.  Export touches recency — a
+        shipped prefix is hot, the LRU should keep it."""
+        matched = self.cache.match(prompt)
+        if matched <= 0:
+            return None
+        return tuple(prompt[:matched]), None
+
+    def import_kv(self, tokens, payload, ready_t: int = 0) -> bool:
+        """Accept a shipped prefix; it becomes visible once the fabric
+        delivers it (``ready_t``, router ticks).  The eventual insert is
+        charged against the KV budget exactly like a locally prefilled run
+        (shipping moves bytes, it does not mint memory)."""
+        self._pending.append((int(ready_t), tuple(tokens)))
+        return True
 
     def finish(self, session: Session) -> None:
         if self.inflight <= 0:
@@ -256,6 +322,12 @@ class _BaselineRouter:
 
 @dataclass
 class FleetResult:
+    """One simulated run's aggregates.  ``stall_*`` are queueing only
+    (submit -> dispatch, router ticks); ``admission_stall_*`` include the
+    service the admission still owes before a first token — ship wait +
+    transfer + prefill of the uncached suffix (submit -> first token) —
+    which is the quantity KV shipping trades against re-prefill."""
+
     name: str
     n_sessions: int = 0
     ticks: int = 0
@@ -269,6 +341,14 @@ class FleetResult:
     dispatch_locality: float = 0.0   # discipline-side: no-switch dispatches
     per_replica_served: list = field(default_factory=list)
     ttfts: list = field(default_factory=list)
+    # admission stall (submit -> first token), the ship/re-prefill currency
+    admission_stall_total: int = 0
+    admission_stall_p99: float = 0.0
+    # KV shipping (0 everywhere when shipping is off)
+    ships: int = 0
+    shipped_tokens: int = 0
+    ship_cycles: int = 0
+    reprefill_avoided: int = 0
 
     @property
     def fairness_factor(self) -> float:
@@ -320,6 +400,7 @@ def simulate(
     cm: FleetCostModel | None = None,
     inter_arrival: int = 16,
     seed: int = 42,
+    kv_ship=None,
     router_kwargs: dict | None = None,
 ) -> FleetResult:
     """Run ``sessions`` through a fleet under one routing arm; returns the
@@ -327,14 +408,34 @@ def simulate(
     with ~uniform jitter around ``inter_arrival``; dispatches drain whenever
     the serialized dispatch pipe is free; a dispatched session occupies its
     replica for prefill(uncached) + decode ticks, then frees the slot and
-    reports TTFT to the router."""
+    reports TTFT to the router.
+
+    ``kv_ship`` (federated arm only): a ``repro.router.kvship.ShipCostModel``
+    or True.  The router then prices min(re-prefill, ship) per dispatch; a
+    chosen ship queues on the serialized fabric pipe and the session's first
+    token waits for max(dispatch, transfer) before prefilling only the
+    unshipped suffix.  The ship model's ``c_prefill`` is re-pinned to this
+    run's ``cm.c_prefill`` so the argmin prices the machine that executes."""
     cm = cm or FleetCostModel()
     rng = random.Random(seed)
     replicas = [
         SimReplica(r, n_slots, cache_budget=cache_budget) for r in range(n_replicas)
     ]
+    router_kwargs = dict(router_kwargs or {})
+    if kv_ship:
+        if arm != "federated":
+            raise ValueError(
+                "kv_ship requires the federated arm — the baselines have no "
+                "federation to discover remote holders with"
+            )
+        from dataclasses import replace
+
+        from .kvship import ShipCostModel
+
+        scm = ShipCostModel() if kv_ship is True else kv_ship
+        router_kwargs["kv_ship"] = replace(scm, c_prefill=cm.c_prefill)
     router = make_router(arm, replicas, topology=topology, seed=seed,
-                         **(router_kwargs or {}))
+                         **router_kwargs)
 
     events: list[tuple[int, int, str, object]] = []
     seq = 0
@@ -352,6 +453,7 @@ def simulate(
     busy_until = 0
     finished = 0
     ttfts: list[int] = []
+    admission_stalls: list[int] = []
     last_t = 0
     while events:
         t, _, kind, payload = heapq.heappop(events)
@@ -376,13 +478,22 @@ def simulate(
             busy_until = start
             uncached = len(session.prompt) - session.local_matched
             prefill = cm.c_prefill * uncached
+            # a chosen ship already reserved the fabric at dispatch time:
+            # the first token additionally waits for the transfer to land
+            # (pipe and fabric overlap — max, not sum)
+            ready = start
+            ship = session.ship
+            if ship is not None and ship.executed:
+                ready = max(start, ship.fabric_end)
+            first_tok = ready + prefill
             # TTFT for the fleet controller runs from *dispatch*, not submit:
             # the GCR loop throttles a replica whose admissions take long to
             # produce a first token (cold-cache storms, internal queueing) —
             # router-side queueing is the signal's *output*, and feeding it
             # back would read congestion as collapse and choke the fleet
-            ttft = start + prefill - session.dispatch_t
-            finish_t = start + prefill + cm.c_decode * session.decode_len
+            ttft = first_tok - session.dispatch_t
+            admission_stalls.append(first_tok - session.submit_t)
+            finish_t = first_tok + cm.c_decode * session.decode_len
             push(finish_t, "finish", (session, ttft))
         if busy_until > t and len(router):
             push(busy_until, "drain", None)
@@ -391,6 +502,8 @@ def simulate(
     stats = router.stats
     stalls = sorted(stats.stalls)
     p99 = stalls[min(len(stalls) - 1, int(0.99 * len(stalls)))] if stalls else 0
+    adm = sorted(admission_stalls)
+    adm_p99 = adm[min(len(adm) - 1, int(0.99 * len(adm)))] if adm else 0
     m = getattr(router, "metrics", None)
     return FleetResult(
         name=arm,
@@ -406,4 +519,10 @@ def simulate(
         dispatch_locality=m.locality if m is not None else 0.0,
         per_replica_served=[r.served for r in replicas],
         ttfts=ttfts,
+        admission_stall_total=sum(adm),
+        admission_stall_p99=float(adm_p99),
+        ships=getattr(stats, "ships", 0),
+        shipped_tokens=getattr(stats, "shipped_tokens", 0),
+        ship_cycles=getattr(stats, "ship_cycles", 0),
+        reprefill_avoided=getattr(stats, "reprefill_avoided", 0),
     )

@@ -49,6 +49,28 @@ class Request:
 
 
 class DecodeEngine:
+    """Continuous-batching decode engine over a CNA-disciplined scheduler.
+
+    Units, because three different quantities flow through here:
+
+      * **ticks** — ``sim_time`` and every ``*_cost`` knob
+        (``domain_switch_cost``, ``slot_migration_cost``) are simulated
+        scheduler ticks; one ``step()`` is one tick plus any admission
+        stalls charged that tick.  Wall-clock never enters the engine.
+      * **tokens** — prompt/output lengths (``Request.prompt``,
+        ``matched_len``) count tokens.
+      * **positions** — ``prefill_positions`` / ``reused_positions`` count
+        KV cache *positions* computed or resumed; for a given prompt these
+        equal its token count, but the counters aggregate across requests
+        and are the unit reuse claims are pinned in.
+
+    Optional subsystems (all default off): ``placement`` makes the slot
+    cache NUMA-homed over the scheduler's topology; ``prefix_index``
+    derives ``domain=None`` homes from cached prefixes; ``prefix_kv``
+    resumes prefill from stored caches, deposits retiring conversations
+    back, and gives the router something to ship (``export_kv`` /
+    ``import_kv``)."""
+
     def __init__(
         self,
         model,
@@ -124,8 +146,12 @@ class DecodeEngine:
         if prefix_kv is True:
             prefix_kv = PrefixKVStore()
         self.prefix_kv = prefix_kv
+        # positions actually computed vs resumed from stored caches (counts
+        # of token positions, the unit reuse claims are pinned in); and
+        # retirement-time deposits made back into the store
         self.prefill_positions = 0
         self.reused_positions = 0
+        self.kv_deposits = 0
         # controller-coupled shedding: with both a placement-aware slot cache
         # and an adaptive controller, wire the controller's occupancy view so
         # a saturated home domain sheds new admissions to same-group siblings
@@ -289,6 +315,45 @@ class DecodeEngine:
         store.put([int(t) for t in prompt], cache, logits)
         return logits, cache
 
+    # -- KV shipping (repro.router.kvship) -------------------------------------
+    def export_kv(self, prompt):
+        """Export the longest stored prefix cache for ``prompt`` for a
+        fabric transfer -> ``(tokens, (cache, logits))`` or None when no
+        ``PrefixKVStore`` is wired or nothing prefixes the prompt.  The
+        bundle is immutable jax arrays (references, not copies), so an
+        export costs nothing until the fabric actually moves the bytes —
+        pricing that move is the router's job, not this method's."""
+        if self.prefix_kv is None:
+            return None
+        matched = self.prefix_kv.peek(prompt)
+        if matched <= 0:
+            return None
+        key = tuple(int(t) for t in prompt)[:matched]
+        entry = self.prefix_kv.get(key)
+        if entry is None:
+            return None
+        return key, entry
+
+    def import_kv(self, tokens, payload) -> bool:
+        """Land a shipped prefix bundle in this engine's ``PrefixKVStore``
+        so the next admission of a prompt extending ``tokens`` resumes from
+        it (the ordinary ``_prefill_reuse`` path — shipped and locally
+        prefilled caches are indistinguishable from there on).  Refuses
+        (returns False) when no store is wired or the shipped cache cannot
+        fit this engine's ``cache_len``; the caller then re-prefills."""
+        if self.prefix_kv is None:
+            return False
+        cache, logits = payload
+        if len(tokens) >= self.cache_len:
+            return False
+        self.prefix_kv.put(list(tokens), self.slots.fit_single(cache), logits)
+        return True
+
+    def peek_match(self, prompt) -> int:
+        """Tokens of ``prompt`` resumable from the prefix-KV store (0
+        without one) — side-effect-free, for the router's ship pricing."""
+        return self.prefix_kv.peek(prompt) if self.prefix_kv is not None else 0
+
     # -- federation export -----------------------------------------------------
     def summary(self, top_k: int = 8) -> dict:
         """Compact replica-state export for a fleet/router tier
@@ -323,6 +388,21 @@ class DecodeEngine:
             past_len = int(self.slots.cache["pos"][slot]) >= self.cache_len - 1
             if req.done or hit_eos or past_len:
                 req.finish_t = self.scheduler.now
+                if self.prefix_kv is not None:
+                    # retirement-time deposit: the slot's cache now encodes
+                    # prompt + out[:-1] (the final token was emitted, never
+                    # fed), and this step's logits row predicts out[-1] —
+                    # exactly the (tokens, cache, logits) contract the store
+                    # keeps.  A conversation follow-up whose prompt extends
+                    # prompt+output then resumes from here instead of
+                    # re-prefilling the whole history.
+                    seq = [int(t) for t in req.prompt] + [int(t) for t in req.out[:-1]]
+                    pos = int(self.slots.cache["pos"][slot])
+                    if 0 < pos < self.cache_len and pos == len(seq):
+                        self.prefix_kv.put(
+                            seq, self.slots.extract(slot), logits[slot : slot + 1]
+                        )
+                        self.kv_deposits += 1
                 if self.prefix_index is not None:
                     # the retiring slot's pool now holds KV for the full
                     # sequence — index it before release so follow-ups that
@@ -337,6 +417,8 @@ class DecodeEngine:
                 del self.active_req[slot]
 
     def run(self, requests: list[Request], max_ticks: int = 10_000) -> list[Request]:
+        """Submit ``requests`` and step until all retire (or ``max_ticks``
+        scheduler ticks elapse); returns the same list, outputs filled."""
         for r in requests:
             self.submit(r)
         ticks = 0

@@ -171,6 +171,28 @@ class SlotCache:
         new["pos"] = jnp.asarray(single_cache["pos"], jnp.int32)
         return new
 
+    def extract(self, slot: int):
+        """Inverse of ``insert``: copy ``slot``'s lane out of the batched
+        pytree as a standalone (batch=1) cache, ``pos`` included as the
+        scalar the model's prefill emits.  jax arrays are immutable, so the
+        result is safe to stash (``PrefixKVStore``) or ship to another
+        engine — the retirement-time deposit path uses exactly this."""
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range")
+
+        def take(src, ax):
+            if ax is None:
+                return src
+            return jax.lax.dynamic_slice_in_dim(src, slot, 1, axis=ax)
+
+        new = {}
+        for key in self.cache:
+            if key == "pos":
+                continue
+            new[key] = jax.tree.map(take, self.cache[key], self.axes[key])
+        new["pos"] = self.cache["pos"][slot]
+        return new
+
     def insert(self, slot: int, single_cache):
         """Insert a (batch=1) prefill cache into ``slot``."""
 

@@ -177,6 +177,36 @@ class PrefixIndex:
         )[0]
         return domain, min(best_len, len(tokens))
 
+    def holders(self, tokens) -> dict[int, int]:
+        """Every domain holding a cached prefix of ``tokens``, with the
+        longest held length: ``{domain: matched_len}`` (lengths in tokens,
+        domains absent when they hold nothing).  This is the per-holder view
+        behind ``home()``'s single answer — the federation reads it to price
+        *shipping* a remote holding against re-prefilling (a summary already
+        advertises full token runs, so the shippable length per replica is
+        exactly the matched run here).  Read-only: no stamps touched, no
+        lookup counted — pricing probes must not look like traffic."""
+        tokens = self._key(tokens)
+        out: dict[int, int] = {}
+        node, i = self.root, 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                break
+            k = _common_len(child.edge, tokens, i)
+            if k == 0:
+                break
+            # as in home(): a partial edge match still matches — the node's
+            # sequence extends the query's prefix, so its holders hold it
+            for d in child.domains:
+                if i + k > out.get(d, 0):
+                    out[d] = i + k
+            i += k
+            if k < len(child.edge):
+                break
+            node = child
+        return out
+
     def _fallback(self) -> int | None:
         if self.n_domains is None:
             return None

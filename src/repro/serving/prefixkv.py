@@ -81,6 +81,29 @@ class PrefixKVStore:
         cache, logits = self._lru[best]
         return len(best), cache, logits
 
+    def peek(self, tokens) -> int:
+        """Length (in tokens) of the longest stored key that exactly prefixes
+        ``tokens`` — ``longest`` without the side effects: no hit/miss
+        counting, no LRU touch.  The router prices ship/re-prefill decisions
+        from this, and a price probe must not look like traffic."""
+        key = self._key(tokens)
+        best = 0
+        for stored in self._lru:
+            if len(stored) > best and len(stored) <= len(key) and stored == key[: len(stored)]:
+                best = len(stored)
+        return best
+
+    def get(self, tokens) -> tuple[Any, Any] | None:
+        """The ``(cache, logits)`` bundle stored under exactly ``tokens``,
+        or None.  Touches recency (an export for shipping is a real use —
+        the prefix is hot somewhere) but not the hit/miss counters, which
+        count prefill-path lookups only."""
+        key = self._key(tokens)
+        if key not in self._lru:
+            return None
+        self._lru.move_to_end(key)
+        return self._lru[key]
+
     def common_run(self, tokens) -> int:
         """Longest common token run between ``tokens`` and any stored key —
         the boundary-planting hint when no stored key is an exact prefix
