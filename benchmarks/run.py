@@ -4,11 +4,15 @@ benches (serving scheduler, slot placement, collective schedules, roofline).
     PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
 Sections: paper, locks, restriction, placement, serving, serving_prefix,
-router, collectives, moe_ep, roofline.  Default: all.  ``serving_prefix`` is
-the jax-free shared-prefix slice of the serving section (prefix-index
-build/lookup/re-home) so the dependency-light smoke lane can cover it;
-``serving`` already includes it.  ``router`` (fleet routing on the jax-free
-discrete-event simulator) is smoke-lane-safe as well.
+serving_continuous, router, collectives, moe_ep, roofline.  Default: all.
+``serving_prefix`` is the jax-free shared-prefix slice of the serving section
+(prefix-index build/lookup/re-home) so the dependency-light smoke lane can
+cover it; ``serving`` already includes it.  ``router`` (fleet routing on the
+jax-free discrete-event simulator) is smoke-lane-safe as well.
+``serving_continuous`` is the continuous-batching slice (needs jax): it — and
+the full ``serving`` section — emits machine-readable ``BENCH_serving.json``
+(tokens/sec, TTFT p50/p99, prefill trace count) so the perf trajectory is
+tracked across PRs; the CI bench lane runs it at smoke scale.
 
 ``--smoke`` shrinks every iteration knob (see benchmarks.common.smoke) so CI
 can exercise each benchmark's code path in seconds; claims still print but do
@@ -62,7 +66,7 @@ def main() -> int:
     sections = args or [
         "paper", "locks", "restriction", "placement", "serving", "router",
         "collectives", "moe_ep", "roofline",
-    ]
+    ]  # "serving" subsumes serving_prefix and serving_continuous
     t0 = time.time()
     if "paper" in sections:
         from . import paper_figures
@@ -81,11 +85,16 @@ def main() -> int:
     if "serving" in sections:
         from . import serving_bench
 
-        serving_bench.run_all()
-    elif "serving_prefix" in sections:
-        from . import serving_bench
+        serving_bench.run_all(json_path="BENCH_serving.json")
+    else:
+        if "serving_prefix" in sections:
+            from . import serving_bench
 
-        serving_bench.shared_prefix()
+            serving_bench.shared_prefix()
+        if "serving_continuous" in sections:
+            from . import serving_bench
+
+            serving_bench.continuous(json_path="BENCH_serving.json")
     if "router" in sections:
         from . import router_bench
 

@@ -16,6 +16,12 @@ positions (printed per replica).  KV shipping is on by default in the fleet
 demo (``--no-kv-ship`` reverts to shed-and-re-prefill): every priced
 ship-vs-reprefill decision prints one ``[ship?]`` line — the runnable
 companion to docs/architecture.md's router walkthrough.
+
+``--arrivals RATE`` switches the driver to a continuous Poisson arrival
+process (RATE requests per engine tick, mixed prompt lengths) against the
+bucketed/packed/AOT-warmed batched engine and prints wall-clock tokens/sec +
+TTFT p50/p99 — the live demo of ``repro.serving.batching``.  Add
+``--no-batching`` to feel the difference on the per-request engine.
 """
 
 from __future__ import annotations
@@ -56,8 +62,17 @@ def main(argv=None) -> int:
     ap.add_argument("--no-kv-ship", action="store_true",
                     help="disable priced prefix-KV shipping in the fleet "
                          "demo (PR 4's shed-and-re-prefill behaviour)")
+    ap.add_argument("--arrivals", type=float, default=None, metavar="RATE",
+                    help="drive a continuous Poisson arrival process at RATE "
+                         "requests/tick (mixed prompt lengths) and print "
+                         "tokens/sec + TTFT p50/p99")
+    ap.add_argument("--no-batching", action="store_true",
+                    help="with --arrivals: use the per-request prefill engine "
+                         "instead of the bucketed/packed batched one")
     args = ap.parse_args(argv)
 
+    if args.arrivals is not None:
+        return serve_arrivals(args)
     if args.replicas > 1:
         return serve_fleet(args)
 
@@ -124,6 +139,61 @@ def main(argv=None) -> int:
               f"locality={m.locality:.2f} switches={m.domain_switches} "
               f"fairness={m.fairness_factor():.3f} wall={wall:.1f}s "
               f"tok_per_simtick={tokens / max(1, eng.sim_time):.2f}{extra}")
+    return 0
+
+
+def serve_arrivals(args) -> int:
+    """The --arrivals demo: a continuous Poisson arrival process against the
+    batched (bucketed/packed/AOT-warmed) engine, wall-clock measured.  TTFT
+    is submit-to-first-token including queueing — what a serving SLO sees."""
+    arch = args.arch.replace("-", "_").replace(".", "")
+    cfg = get_reduced_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+    lens = rng.integers(2, args.cache_len - 1, args.requests)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, int(l)).astype(np.int32),
+                max_new=args.max_new, domain=int(rng.integers(0, args.domains)))
+        for i, l in enumerate(lens)
+    ]
+    arrivals = np.floor(
+        np.cumsum(rng.exponential(1.0 / args.arrivals, args.requests))
+    ).astype(int).tolist()
+
+    batched = not args.no_batching
+    t_build = time.time()
+    eng = DecodeEngine(model, params, n_slots=args.slots, cache_len=args.cache_len,
+                       scheduler=CNAScheduler(fairness_threshold=args.fairness_threshold),
+                       domain_switch_cost=args.switch_cost, batching=batched)
+    warm = time.time() - t_build  # AOT bucket traces compile in here, not below
+
+    submit_at, ttft = {}, {}
+    i = tick = 0
+    t0 = time.time()
+    while i < len(reqs) or len(eng.scheduler) or eng.active_req:
+        while i < len(reqs) and arrivals[i] <= tick:
+            submit_at[reqs[i].rid] = time.time()
+            eng.submit(reqs[i])
+            i += 1
+        eng.step()
+        for r in reqs:
+            if r.rid not in ttft and r.out:
+                ttft[r.rid] = time.time() - submit_at[r.rid]
+        tick += 1
+    wall = time.time() - t0
+
+    tokens = sum(len(r.out) for r in reqs)
+    waits = np.array([ttft[r.rid] for r in reqs])
+    cc = eng.compile_counts
+    traces = cc["prefill"] + cc.get("packed_prefill", 0) + cc.get("cont_prefill", 0)
+    mode = "batched" if batched else "per-request"
+    print(f"[arrivals {mode}] rate={args.arrivals}/tick requests={len(reqs)} "
+          f"tokens={tokens} tokens_per_sec={tokens / wall:.1f} "
+          f"ttft_p50={np.percentile(waits, 50) * 1e3:.0f}ms "
+          f"ttft_p99={np.percentile(waits, 99) * 1e3:.0f}ms "
+          f"prefill_traces={traces} decode_traces={cc['decode']} "
+          f"warmup={warm:.1f}s wall={wall:.1f}s")
     return 0
 
 

@@ -20,6 +20,7 @@ residency rather than the 2x of the xs/ys formulation.
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
 
 import jax
@@ -272,6 +273,83 @@ def block_step(params, x_t, cfg, kind, pos, cache):
     raise ValueError(kind)
 
 
+# ---------------------------------------------------------------------------
+# packed / continuation prefill (continuous batching)
+# ---------------------------------------------------------------------------
+
+def _scatter_rows(cache: jax.Array, new: jax.Array, start, length) -> jax.Array:
+    """Write ``new`` (B, T, kv, hd) into ``cache`` (B, S, kv, hd) at per-row
+    column offsets: token t of row b lands at column ``start[b] + t``, and
+    only ``t < length[b]`` commits (right-padded rows never touch the cache).
+    Gather-then-select keeps this one fused ``where`` over the cache — the
+    same masked-select idiom as ``DecoderLM._merge_kv`` — so no per-row
+    dynamic slices fan out under the layer scan."""
+    idx = jnp.arange(cache.shape[1])[None, :] - start[:, None]          # (B, S)
+    valid = (idx >= 0) & (idx < length[:, None])
+    take = jnp.clip(idx, 0, new.shape[1] - 1)[:, :, None, None]
+    take = jnp.broadcast_to(take, idx.shape + new.shape[2:])
+    g = jnp.take_along_axis(new, take, axis=1)
+    return jnp.where(valid[:, :, None, None], g.astype(cache.dtype), cache)
+
+
+def _attn_rows(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, start) -> jax.Array:
+    """``attn_xla`` with a *per-row* query offset: query t of row b sits at
+    position ``start[b] + t`` and attends causally over the position-ordered
+    cache columns.  Op-for-op the same graph as ``attn_xla`` (grouped einsum,
+    NEG_INF mask, ``jax.nn.softmax``, grouped PV einsum) — masked columns
+    contribute exact zeros, which is what makes continuation prefill
+    bitwise-equal to the from-scratch path (regression-tested)."""
+    b, sq, h, hd = q.shape
+    skv, hkv = k_cache.shape[1], k_cache.shape[2]
+    scale = 1.0 / math.sqrt(hd)
+    qg = attn_mod._group_q(q * jnp.asarray(scale, q.dtype), hkv)
+    s = jnp.einsum(
+        "bqkgd,bskd->bkgqs", qg.astype(k_cache.dtype), k_cache,
+        preferred_element_type=jnp.float32,
+    )
+    q_pos = start[:, None] + jnp.arange(sq)[None, :]                    # (B, Sq)
+    mask = q_pos[:, :, None] - jnp.arange(skv)[None, None, :] >= 0      # (B, Sq, Skv)
+    s = jnp.where(mask[:, None, None], s, attn_mod.NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bkgqs,bskd->bqkgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def _attn_cont(params, x, cfg, rope_cs, kv_cache, start, length):
+    """Attention sublayer, suffix-continuation mode: the suffix K/V land in
+    the (seeded) cache at per-row offsets first, then the suffix queries
+    attend over the whole cache.  Returns (x_out, (k_cache, v_cache))."""
+    h = _norm(params, "ln1", x, cfg)
+    q = jnp.einsum("bsd,dhk->bshk", h, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, params["wv"])
+    if rope_cs is not None:
+        cos, sin = rope_cs
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    kc, vc = kv_cache
+    kc = _scatter_rows(kc, k, start, length)
+    vc = _scatter_rows(vc, v, start, length)
+    o = _attn_rows(q, kc, vc, start)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"])
+    return x + shard(out, "batch", "seq", "embed"), (kc, vc)
+
+
+def block_cont(params, x, cfg, kind, rope_cs, kv_cache, start, length):
+    """Suffix-continuation block (attention kinds only — recurrent/SSM state
+    absorbs padded positions, so those families never take this path).
+    Returns (x, (k_cache, v_cache))."""
+    if kind != "attn":
+        raise ValueError(f"continuation prefill supports 'attn' blocks, got {kind!r}")
+    x, kv = _attn_cont(params, x, cfg, rope_cs, kv_cache, start, length)
+    h = _norm(params, "ln2", x, cfg)
+    x = x + mlp_apply(params["mlp"], h, cfg.mlp)
+    return shard(x, "batch", "seq", "embed"), kv
+
+
 def cfg_cache_dtype(cfg):
     return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
 
@@ -502,6 +580,123 @@ class DecoderLM:
                 new.append(c)
             out[seg.name] = tuple(new) if seg.mode == "scan" else new[0]
         return out
+
+    # -- packed / continuation prefill (continuous batching) --------------------
+    def supports_packed_prefill(self, cache_len: int | None = None) -> bool:
+        """Whether right-padded packed prefill is *bitwise-exact* for this
+        arch.  Padding is invisible only when every block is plain dense
+        attention: recurrent/SSM state and MoE capacity routing absorb padded
+        positions, sliding-window ring caches place entries by absolute slot,
+        and patch rows overwrite leading positions.  When ``cache_len`` is
+        given, also require that every bucket the engine would use dispatches
+        to the same ``attn_xla`` path as the per-request reference (a bucket
+        above ``attn_chunk`` would stream while the reference doesn't)."""
+        cfg = self.cfg
+        ok = (
+            cfg.window == 0
+            and cfg.n_patches == 0
+            and all(k == "attn" for seg in self.segments for k in seg.kinds)
+        )
+        if ok and cache_len is not None and cfg.attn_impl != "xla":
+            ok = cache_len <= cfg.attn_chunk
+        return ok
+
+    def _mask_packed(self, caches, lengths):
+        """Zero every KV position >= the row's true length.  Right-padded
+        rows compute garbage K/V past the prompt; zeroing them matches the
+        zero-padding of ``SlotCache._fit`` so a packed row is bitwise the
+        per-request cache, not just equal on the valid span."""
+        out = {}
+        for seg in self.segments:
+            per = caches[seg.name]
+            if seg.mode == "unroll":
+                per = (per,)
+            new = []
+            for c in per:  # (k, v): (L, B, S, kv, hd) scanned | (B, S, kv, hd)
+                def z(t):
+                    s = t.shape[2 if t.ndim == 5 else 1]
+                    keep = jnp.arange(s)[None, :] < lengths[:, None]     # (B, S)
+                    keep = keep[..., None, None]
+                    if t.ndim == 5:
+                        keep = keep[None]
+                    return jnp.where(keep, t, jnp.zeros((), t.dtype))
+                new.append(tuple(z(t) for t in c))
+            out[seg.name] = tuple(new) if seg.mode == "scan" else new[0]
+        return out
+
+    def prefill_packed(self, params, tokens, lengths, *, cache_headroom: int = 8):
+        """Packed prefill: ``tokens`` (B, S) right-padded prompt rows,
+        ``lengths`` (B,) true lengths -> (per-row last-*real*-token logits
+        (B, Vpad), cache with per-row ``pos``).  One trace serves every
+        workload sharing (B, S): the batching layer buckets S to powers of
+        two so trace count stays O(log cache_len).  On the ``attn_xla`` path
+        each row is bitwise what ``prefill`` returns for that prompt alone —
+        masked pad columns add exact zeros (regression-tested).  Rows with
+        ``length == 0`` are dummies (pack remainder): their logits are
+        garbage by contract and their KV/pos stay zero."""
+        lengths = jnp.asarray(lengths, jnp.int32)
+        x = self._embed(params, tokens)
+        x, _, caches = self._run_full(params, x, want_cache=True)
+        if cache_headroom:
+            caches = self._pad_caches(caches, cache_headroom)
+        caches = self._mask_packed(caches, lengths)
+        idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self._logits(params, x_last)
+        caches["pos"] = lengths
+        return logits[:, 0], caches
+
+    def prefill_cont(self, params, cache, tokens, lengths):
+        """Continuation prefill: extend per-row seeded caches by whole
+        right-padded suffixes in one call.  ``cache`` is a batched cache
+        whose ``pos`` (B,) marks each row's seeded length (KV for positions
+        < pos already written, zeros past it); ``tokens`` (B, T) are the
+        suffixes, ``lengths`` (B,) their true lengths.  Replaces the
+        one-``decode_step``-per-suffix-token resume loop — and unlike that
+        loop it stays *bitwise-equal* to the from-scratch ``prefill`` of the
+        full prompt (the decode path's two-part online softmax only agrees
+        to cache-dtype resolution; this path replays ``attn_xla``'s exact op
+        order over the position-ordered cache).  Rows with ``length == 0``
+        pass through untouched."""
+        cfg = self.cfg
+        start = jnp.asarray(cache["pos"], jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        x = self._embed(params, tokens, pos_offset=start)
+        rope_cs = None
+        if cfg.pos == "rope":
+            pos = start[:, None] + jnp.arange(tokens.shape[1])[None, :]
+            rope_cs = rope_angles(pos, cfg.hd, cfg.rope_theta)
+
+        new_cache = dict(cache)
+        for seg in self.segments:
+            p = self._seg_params(params, seg)
+            if seg.mode == "unroll":
+                x, kv = block_cont(
+                    p[0], x, cfg, seg.kinds[0], rope_cs, cache[seg.name],
+                    start, lengths,
+                )
+                new_cache[seg.name] = kv
+                continue
+
+            seg_log = self._seg_logical(seg)
+
+            def body(xx, xs, _kinds=seg.kinds, _log=seg_log):
+                ps, cs = xs
+                kvs = []
+                for j, kind in enumerate(_kinds):
+                    p_j = self._constrain_sliced(ps[j], _log[j])
+                    xx, kv = block_cont(p_j, xx, cfg, kind, rope_cs, cs[j], start, lengths)
+                    kvs.append(kv)
+                return xx, tuple(kvs)
+
+            x, ys = jax.lax.scan(body, x, (p, cache[seg.name]))
+            new_cache[seg.name] = ys
+
+        idx = jnp.clip(lengths - 1, 0, x.shape[1] - 1)
+        x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+        logits = self._logits(params, x_last)
+        new_cache["pos"] = start + lengths
+        return logits[:, 0], new_cache
 
     def _merge_kv(self, old, new, pos):
         """Write the (…, B, 1, kv, hd) new-token slices into the cache at

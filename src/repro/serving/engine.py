@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .batching import CountingJit, PrefillBatcher
 from .kvcache import SlotCache
 from .prefixindex import PrefixIndex
 from .prefixkv import PrefixKVStore
@@ -69,7 +70,11 @@ class DecodeEngine:
     derives ``domain=None`` homes from cached prefixes; ``prefix_kv``
     resumes prefill from stored caches, deposits retiring conversations
     back, and gives the router something to ship (``export_kv`` /
-    ``import_kv``)."""
+    ``import_kv``); ``batching`` routes admission through the bucketed /
+    packed / AOT-warmed prefill layer (``repro.serving.batching``) — at
+    most one packed prefill call per ``step()``, interleaved with running
+    decode, with jit trace count bounded by the bucket count instead of
+    growing with distinct prompt lengths."""
 
     def __init__(
         self,
@@ -86,6 +91,8 @@ class DecodeEngine:
         slot_migration_cost: int = 2,
         prefix_index=None,
         prefix_kv=None,
+        batching: bool = False,
+        pack_width: int | None = None,
     ):
         self.model = model
         self.params = params
@@ -177,8 +184,33 @@ class DecodeEngine:
         self.domain_switch_cost = domain_switch_cost
         self.slot_migration_cost = slot_migration_cost
         self.sim_time = 0
-        self._prefill = jax.jit(model.prefill)
-        self._step = jax.jit(model.decode_step)
+        # counting wrappers so compile-count tests and the serving bench can
+        # pin trace budgets on either path
+        self._prefill = CountingJit(model.prefill)
+        self._step = CountingJit(model.decode_step)
+        # batching: the bucketed/packed prefill layer.  Raises at
+        # construction for archs where right-padding is not bitwise-invisible
+        # (recurrent/SSM/MoE/sliding-window/VLM) — run those with it off.
+        self.batcher = None
+        if batching:
+            self.batcher = PrefillBatcher(
+                model, cache_len=cache_len, pack_width=pack_width or n_slots,
+            )
+            # AOT: every bucket trace compiles here, none in the serving loop
+            self.batcher.warm(params, cont=self.prefix_kv is not None)
+
+    @property
+    def compile_counts(self) -> dict:
+        """Jit trace counts per entry point: ``prefill``/``decode`` for the
+        bare per-request paths, plus ``packed_prefill``/``cont_prefill``
+        when batching is on.  The regression contract: decode traces once,
+        and packed-prefill traces stay bounded by the bucket count no matter
+        how many distinct prompt lengths the workload carries."""
+        out = {"prefill": self._prefill.traces, "decode": self._step.traces}
+        if self.batcher is not None:
+            out["packed_prefill"] = self.batcher.packed.traces
+            out["cont_prefill"] = self.batcher.cont.traces
+        return out
 
     # -- admission -------------------------------------------------------------
     def submit(self, req: Request):
@@ -220,35 +252,134 @@ class DecodeEngine:
         req.submit_t = self.scheduler.now
         self.scheduler.submit(req, req.domain)
 
+    def _claim_and_charge(self, req: Request, switch_distance: int) -> int:
+        """Claim a slot for a granted request and charge its admission
+        stalls (domain switch + KV migration); returns the slot."""
+        slot = self.slots.claim(req.rid, req.domain)
+        migration = self.slot_migration_cost * self.slots.last_distance
+        if req.matched_len and len(req.prompt):
+            # only the uncached suffix of the KV is charged for an
+            # off-home placement.  Modeling assumption (the index's
+            # multi-holder records make it concrete): a prefix hot enough
+            # to match is replicated into every pool that recently served
+            # it, so the matched run is treated as already resident where
+            # the slot lands and only the per-request suffix moves.
+            uncached = max(0, len(req.prompt) - req.matched_len)
+            migration = migration * uncached // len(req.prompt)
+        stall = self.domain_switch_cost * switch_distance + migration
+        self.sim_time += stall
+        if self.prefix_index is not None and self.slots.last_domain is not None:
+            # re-home: the prefix now lives wherever placement actually
+            # put it, which is where the next match should send traffic
+            self.prefix_index.record(req.prompt, self.slots.last_domain)
+        # one handover sample per admission: the GCR feedback signal for
+        # an adaptive max_active (no-op under a static/absent cap)
+        self.scheduler.observe_handover(stall)
+        req.admit_t = self.scheduler.now
+        return slot
+
     def _admit(self):
+        if self.batcher is not None:
+            self._admit_packed()
+            return
         while self.slots.n_free and len(self.scheduler):
             req = self.scheduler.next_request()
             if req is None:
                 break
-            slot = self.slots.claim(req.rid, req.domain)
-            migration = self.slot_migration_cost * self.slots.last_distance
-            if req.matched_len and len(req.prompt):
-                # only the uncached suffix of the KV is charged for an
-                # off-home placement.  Modeling assumption (the index's
-                # multi-holder records make it concrete): a prefix hot enough
-                # to match is replicated into every pool that recently served
-                # it, so the matched run is treated as already resident where
-                # the slot lands and only the per-request suffix moves.
-                uncached = max(0, len(req.prompt) - req.matched_len)
-                migration = migration * uncached // len(req.prompt)
-            stall = self.domain_switch_cost * self.scheduler.last_admit_distance + migration
-            self.sim_time += stall
-            if self.prefix_index is not None and self.slots.last_domain is not None:
-                # re-home: the prefix now lives wherever placement actually
-                # put it, which is where the next match should send traffic
-                self.prefix_index.record(req.prompt, self.slots.last_domain)
-            # one handover sample per admission: the GCR feedback signal for
-            # an adaptive max_active (no-op under a static/absent cap)
-            self.scheduler.observe_handover(stall)
-            req.admit_t = self.scheduler.now
+            slot = self._claim_and_charge(req, self.scheduler.last_admit_distance)
             logits, cache = self._prefill_reuse(req.prompt, req.matched_len)
             self.slots.insert(slot, cache)
             tok = int(jnp.argmax(logits[0]))
+            req.out.append(tok)
+            self.tokens = self.tokens.at[slot, 0].set(tok)
+            self.active_req[slot] = req
+
+    def _admit_packed(self):
+        """Packed admission: at most one packed prefill call (plus at most
+        one continuation call when a prefix-KV store is wired) per ``step``,
+        so prefill *interleaves* with running decode instead of draining the
+        queue synchronously.  Grants beyond ``pack_width`` stay queued for
+        the next tick.  This subsumes ``_prefill_reuse`` for the batched
+        path: store hits ride the continuation pack (whole suffixes at
+        seeded positions, still bitwise the from-scratch result), boundary
+        plants ride the fresh pack as extra rows, and accounting
+        (``prefill_positions``/``reused_positions``) charges exactly what
+        the per-request path would."""
+        k = min(self.slots.n_free, self.batcher.pack_width)
+        if k <= 0:
+            return
+        reqs = self.scheduler.next_batch(k)
+        if not reqs:
+            return
+        store = self.prefix_kv
+        admitted = [
+            (req, self._claim_and_charge(req, dist))
+            for req, dist in zip(reqs, self.scheduler.last_batch_distances)
+        ]
+        fresh = []   # (req, slot, boundary-plant hint)
+        cont = []    # (req, slot, matched, stored cache)
+        ready = []   # (req, slot, stored logits) — whole prompt cached
+        if store is None:
+            fresh = [(req, slot, 0) for req, slot in admitted]
+        else:
+            for req, slot in admitted:
+                reuse = store.longest(req.prompt)
+                if reuse is not None:
+                    matched, cache, logits = reuse
+                    self.reused_positions += matched
+                    if matched == len(req.prompt):
+                        self.slots.insert(slot, cache)
+                        store.put([int(t) for t in req.prompt], cache, logits)
+                        ready.append((req, slot, logits))
+                    else:
+                        cont.append((req, slot, matched, cache))
+                else:
+                    hint = max(int(req.matched_len), store.common_run(req.prompt))
+                    if hint < store.min_plant or hint > len(req.prompt):
+                        hint = 0
+                    fresh.append((req, slot, hint))
+
+        assign = []  # (req, slot, device first-token scalar)
+        if fresh:
+            rows = [req.prompt for req, _, _ in fresh]
+            # boundary plants ride the same pack as extra rows when there is
+            # room; their positions are a replica of the full row's prefix,
+            # so they are not charged again
+            plant = []
+            for req, _, hint in fresh:
+                if hint and len(rows) < self.batcher.pack_width:
+                    plant.append((len(rows), [int(t) for t in req.prompt[:hint]]))
+                    rows.append(req.prompt[:hint])
+            logits, cache = self.batcher.prefill(self.params, rows)
+            nxt = jnp.argmax(logits, axis=-1)
+            for i, (req, slot, _hint) in enumerate(fresh):
+                self.slots.insert_row(slot, cache, i)
+                self.prefill_positions += len(req.prompt)
+                assign.append((req, slot, nxt[i]))
+                if store is not None:
+                    single = self.slots.fit_single(self.batcher.extract_row(cache, i))
+                    store.put([int(t) for t in req.prompt], single, logits[i : i + 1])
+            for i, boundary in plant:
+                single = self.slots.fit_single(self.batcher.extract_row(cache, i))
+                store.put(boundary, single, logits[i : i + 1])
+        if cont:
+            rows = [c for _, _, _, c in cont]
+            suffixes = [req.prompt[matched:] for req, _, matched, _ in cont]
+            logits, cache = self.batcher.continue_rows(self.params, rows, suffixes)
+            nxt = jnp.argmax(logits, axis=-1)
+            for i, (req, slot, matched, _c) in enumerate(cont):
+                self.slots.insert_row(slot, cache, i)
+                self.prefill_positions += len(req.prompt) - matched
+                assign.append((req, slot, nxt[i]))
+                single = self.slots.fit_single(self.batcher.extract_row(cache, i))
+                store.put([int(t) for t in req.prompt], single, logits[i : i + 1])
+        for req, slot, logits in ready:
+            assign.append((req, slot, jnp.argmax(logits[0])))
+
+        # ONE host transfer for every admitted request's first token
+        toks = jax.device_get([t for _, _, t in assign]) if assign else []
+        for (req, slot, _), tok in zip(assign, toks):
+            tok = int(tok)
             req.out.append(tok)
             self.tokens = self.tokens.at[slot, 0].set(tok)
             self.active_req[slot] = req
@@ -379,13 +510,19 @@ class DecodeEngine:
         logits, new_cache = self._step(self.params, self.slots.cache, self.tokens)
         self.slots.cache = new_cache
         self.sim_time += 1
+        # next-token feedback stays on device (the whole vector replaces
+        # self.tokens — inactive lanes carry garbage, but claim->insert
+        # overwrites a lane before it is ever decoded); the per-slot python
+        # bookkeeping below then needs exactly ONE host transfer per tick
+        # instead of two device syncs per active slot.
         nxt = jnp.argmax(logits, axis=-1)
+        self.tokens = nxt[:, None].astype(jnp.int32)
+        nxt_host, pos_host = jax.device_get((nxt, new_cache["pos"]))
         for slot, req in list(self.active_req.items()):
-            tok = int(nxt[slot])
+            tok = int(nxt_host[slot])
             req.out.append(tok)
-            self.tokens = self.tokens.at[slot, 0].set(tok)
             hit_eos = self.eos is not None and tok == self.eos
-            past_len = int(self.slots.cache["pos"][slot]) >= self.cache_len - 1
+            past_len = int(pos_host[slot]) >= self.cache_len - 1
             if req.done or hit_eos or past_len:
                 req.finish_t = self.scheduler.now
                 if self.prefix_kv is not None:
@@ -397,7 +534,7 @@ class DecodeEngine:
                     # prompt+output then resumes from here instead of
                     # re-prefilling the whole history.
                     seq = [int(t) for t in req.prompt] + [int(t) for t in req.out[:-1]]
-                    pos = int(self.slots.cache["pos"][slot])
+                    pos = int(pos_host[slot])
                     if 0 < pos < self.cache_len and pos == len(seq):
                         self.prefix_kv.put(
                             seq, self.slots.extract(slot), logits[slot : slot + 1]

@@ -193,6 +193,33 @@ class SlotCache:
         new["pos"] = self.cache["pos"][slot]
         return new
 
+    def insert_row(self, slot: int, batched_cache, row: int):
+        """Scatter lane ``row`` of another batched cache pytree (a packed
+        prefill's output) into ``slot`` — per leaf, slice the source lane on
+        its batch axis and ``dynamic_update_slice`` it into this cache's,
+        with the same pad/trim ``_fit`` applies on the single-cache path.
+        This is how a packed prefill call lands its rows in their claimed
+        slots without materialising per-row intermediate caches."""
+
+        def put(dst, src, ax):
+            if ax is None:
+                return dst
+            lane = jax.lax.dynamic_slice_in_dim(jnp.asarray(src), row, 1, axis=ax)
+            lane = _fit(lane, dst, ax)
+            idx = [0] * dst.ndim
+            idx[ax] = slot
+            return jax.lax.dynamic_update_slice(dst, lane.astype(dst.dtype), tuple(idx))
+
+        new = {}
+        for key in self.cache:
+            if key == "pos":
+                continue
+            new[key] = jax.tree.map(put, self.cache[key], batched_cache[key], self.axes[key])
+        new["pos"] = self.cache["pos"].at[slot].set(
+            jnp.asarray(batched_cache["pos"], jnp.int32)[row]
+        )
+        self.cache = new
+
     def insert(self, slot: int, single_cache):
         """Insert a (batch=1) prefill cache into ``slot``."""
 

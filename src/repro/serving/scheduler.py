@@ -88,6 +88,8 @@ class _BaseScheduler:
         # distance of the most recent admission's switch (0 when local);
         # the engine charges migration cost from this instead of recomputing
         self.last_admit_distance = 0
+        # per-grant distances of the most recent next_batch (see next_batch)
+        self.last_batch_distances: list[int] = []
 
     @property
     def now(self) -> int:
@@ -149,6 +151,24 @@ class _BaseScheduler:
             self.metrics.switch_distance += self.last_admit_distance
             self.current_domain = domain
         return request
+
+    def next_batch(self, k: int) -> list:
+        """Grant up to ``k`` requests in admission order — the packer's pack.
+
+        Each grant goes through ``next_request`` so metrics, fairness and
+        the current-domain walk are identical to one-at-a-time admission;
+        the per-grant switch distances (``last_admit_distance`` snapshots,
+        which a batch caller would otherwise lose) are kept in
+        ``last_batch_distances`` aligned with the returned list."""
+        out = []
+        self.last_batch_distances = []
+        while len(out) < k:
+            req = self.next_request()
+            if req is None:
+                break
+            out.append(req)
+            self.last_batch_distances.append(self.last_admit_distance)
+        return out
 
     def tick(self):
         self._clock += 1

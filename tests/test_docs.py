@@ -1,12 +1,15 @@
 """The docs lane: executable documentation that cannot rot.
 
-``docs/architecture.md``'s fenced ```python blocks are a narrative of the
-five layers *and* a test suite: this module extracts them and executes them
-in order, top to bottom, sharing one namespace per document (later blocks
-may use names defined by earlier ones, exactly as a reader reads them).
-Every block is jax-free by construction — the narrative runs through the
-simulator-backed paths — so the CI ``docs`` lane runs this file with numpy
-only, next to the bench smoke lane.
+``docs/*.md``'s fenced ```python blocks are a narrative of the five layers
+*and* a test suite: this module extracts them and executes them in order,
+top to bottom, sharing one namespace per document (later blocks may use
+names defined by earlier ones, exactly as a reader reads them).  Every
+plain ```python block is jax-free by construction — the narrative runs
+through the simulator-backed paths — so the CI ``docs`` lane runs this file
+with numpy only, next to the bench smoke lane.  Blocks fenced as
+```python jax (docs/models.md's reduced-config model walkthroughs) need the
+real dependency: they execute in environments where jax imports (the tier-1
+lane) and are skipped, not failed, in the numpy-only docs lane.
 
 Cross-references are checked too: every relative markdown link in ``docs/``
 and ``README.md`` must resolve to a real file, so a moved document breaks CI
@@ -21,8 +24,16 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DOCS = os.path.join(REPO, "docs")
 
-_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+_FENCE = re.compile(r"^```python( jax)?\s*$(.*?)^```\s*$", re.M | re.S)
 _LINK = re.compile(r"\[[^\]]*\]\(([^)]+)\)")
+
+
+def _have_jax():
+    try:
+        import jax  # noqa: F401
+    except ImportError:
+        return False
+    return True
 
 
 def _doc_files():
@@ -31,17 +42,28 @@ def _doc_files():
     )
 
 
-def _blocks(path):
+def _blocks(path, *, jax_only=None):
+    """Fenced blocks in document order.  ``jax_only=False`` keeps the plain
+    ```python fences, ``True`` the ```python jax ones, ``None`` both."""
     with open(path) as f:
-        return _FENCE.findall(f.read())
+        found = _FENCE.findall(f.read())
+    return [
+        body
+        for marker, body in found
+        if jax_only is None or bool(marker) == jax_only
+    ]
 
 
 def test_docs_exist_and_have_examples():
     paths = _doc_files()
     names = {os.path.basename(p) for p in paths}
-    assert {"architecture.md", "benchmarks.md"} <= names
+    assert {"architecture.md", "benchmarks.md", "models.md"} <= names
     arch = os.path.join(DOCS, "architecture.md")
     assert len(_blocks(arch)) >= 5, "the narrative lost its runnable examples"
+    zoo = os.path.join(DOCS, "models.md")
+    assert len(_blocks(zoo, jax_only=True)) >= 1, (
+        "the model-zoo doc lost its runnable reduced-config example"
+    )
 
 
 @pytest.mark.parametrize(
@@ -52,12 +74,33 @@ def test_doc_python_blocks_execute(path):
     the assertions inside them are the documentation's contract with the
     code.  A document without blocks passes trivially."""
     ns = {"__name__": f"docs:{os.path.basename(path)}"}
-    for i, block in enumerate(_blocks(path)):
+    for i, block in enumerate(_blocks(path, jax_only=False)):
         try:
             exec(compile(block, f"{path}#block{i}", "exec"), ns)
         except Exception as e:  # pragma: no cover - failure path
             pytest.fail(
                 f"{os.path.basename(path)} block {i} failed: {e!r}\n{block}"
+            )
+
+
+@pytest.mark.parametrize(
+    "path", _doc_files(), ids=[os.path.basename(p) for p in _doc_files()]
+)
+def test_doc_jax_blocks_execute(path):
+    """Same contract for the ```python jax fences — executed where jax
+    imports (the tier-1 lane), skipped in the numpy-only docs lane."""
+    blocks = _blocks(path, jax_only=True)
+    if not blocks:
+        return
+    if not _have_jax():
+        pytest.skip("jax not installed: docs lane runs numpy-only")
+    ns = {"__name__": f"docs:{os.path.basename(path)}"}
+    for i, block in enumerate(blocks):
+        try:
+            exec(compile(block, f"{path}#jaxblock{i}", "exec"), ns)
+        except Exception as e:  # pragma: no cover - failure path
+            pytest.fail(
+                f"{os.path.basename(path)} jax block {i} failed: {e!r}\n{block}"
             )
 
 
