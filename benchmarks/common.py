@@ -1,7 +1,10 @@
-"""Shared helpers for the benchmark suite: CSV tables + claim checks."""
+"""Shared helpers for the benchmark suite: CSV tables, claim checks, and the
+shared ``BENCH_<section>.json`` emitter every ``benchmarks/run.py`` section
+writes through (one schema: claims, headline metrics, pass/fail)."""
 
 from __future__ import annotations
 
+import json
 import sys
 import time
 from contextlib import contextmanager
@@ -53,8 +56,77 @@ def claim(name: str, ok: bool, detail: str = ""):
     status = "PASS" if ok else "FAIL"
     if not ok:
         FAILED_CLAIMS.append(name)
+    if _SECTION is not None:
+        _SECTION["claims"].append({"name": name, "ok": bool(ok), "detail": detail})
     print(f"CLAIM [{status}] {name}  {detail}")
     return ok
+
+
+# -- shared BENCH_<section>.json schema ---------------------------------------
+# One record per run.py section: {"bench", "schema", "smoke", "claims":
+# [{name, ok, detail}], "metrics": {...}, "passed"}.  Claims land via claim()
+# while the section is active; headline numbers via headline() /
+# headline_registry() (the latter snapshots a repro.obs.MetricsRegistry, which
+# is how sections source their numbers from the unified registry).
+BENCH_SCHEMA = 1
+
+_SECTION: dict | None = None
+
+
+@contextmanager
+def bench_section(name: str, json_dir: str = "."):
+    """Collect claims + headline metrics for one bench section and write
+    ``BENCH_<name>.json`` on exit (even when the section raises — a partial
+    record with its failed claims beats no record)."""
+    global _SECTION
+    prev = _SECTION
+    _SECTION = {
+        "bench": name,
+        "schema": BENCH_SCHEMA,
+        "smoke": SMOKE,
+        "claims": [],
+        "metrics": {},
+    }
+    try:
+        yield _SECTION
+    finally:
+        rec, _SECTION = _SECTION, prev
+        rec["passed"] = all(c["ok"] for c in rec["claims"])
+        path = _os.path.join(json_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=2, default=str)
+        print(
+            f"[wrote {path}: {len(rec['claims'])} claims, "
+            f"{'pass' if rec['passed'] else 'FAIL'}]"
+        )
+
+
+def headline(**metrics) -> None:
+    """Merge headline numbers into the active section's record (no-op when
+    no section is active, so benches stay runnable standalone)."""
+    if _SECTION is not None:
+        _SECTION["metrics"].update(metrics)
+
+
+def headline_registry(registry, prefix: str = "") -> None:
+    """Snapshot a ``repro.obs.MetricsRegistry`` into the active section's
+    metrics — the registry-sourced path for BENCH records."""
+    if _SECTION is not None:
+        snap = registry.collect()
+        if prefix:
+            snap = {f"{prefix}{k}": v for k, v in snap.items()}
+        _SECTION["metrics"].update(snap)
+
+
+def emit_json(payload: dict, json_path: str | None = None) -> None:
+    """Route a bench's own JSON payload: merged into the active section's
+    metrics when one is active (the section file carries it), else written
+    directly to ``json_path`` (standalone invocations, tests)."""
+    if _SECTION is not None:
+        _SECTION["metrics"].update(payload)
+    elif json_path:
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=2, default=str)
 
 
 def ascii_plot(title: str, xs, series: dict, *, width: int = 64, height: int = 16,

@@ -1,0 +1,128 @@
+"""Observability tier: the cost of watching, and the books balancing.
+
+Two claims ride here, both jax-free (the fleet simulator is the workload, so
+this module sits in the CI smoke lane):
+
+  * zero-cost-off / bounded-overhead — a fleet run with a ``repro.obs.Tracer``
+    attached must produce a numerically identical ``FleetResult`` (same grant
+    orders, same stalls, to the last integer: the tracer never consumes shared
+    RNG and never takes a branch the untraced run doesn't), and the traced
+    run's wall-clock must stay within a generous bound of the untraced one
+    (span emission is dataclass appends next to real event-loop work);
+  * attribution conservation — per session AND in aggregate, the four phase
+    spans (``queue_wait + dispatch + ship_wait + prefill``) sum *exactly* to
+    the admission stall (submit -> first token).  No cycle invented, none
+    lost.  The property-test version lives in tests/test_obs.py; this is the
+    same law checked at bench scale with KV shipping on (the hardest arm:
+    ship waits and partial prefills in the mix).
+
+The section's headline numbers are sourced from the unified
+``repro.obs.MetricsRegistry`` (``common.headline_registry``) — the same
+registry the stat surfaces register into as live views — and the per-request
+flame summary demonstrates the exporter path end to end.
+"""
+
+from __future__ import annotations
+
+import random
+import time
+from dataclasses import asdict
+
+from repro.obs import MetricsRegistry, Tracer, flame, render_prometheus
+from repro.router import ShipCostModel, shared_prefix_sessions, simulate
+
+from . import common
+from .common import ascii_plot, claim, smoke, table, zipf_draws
+
+
+def _workload(n_sessions, seed):
+    rng = random.Random(seed)
+    draws = zipf_draws(n_sessions, 12, 0.7, rng)
+    return lambda: shared_prefix_sessions(draws, 96, 16, 32)
+
+
+def tracing_overhead(n_sessions=600, n_replicas=4, seed=31):
+    n_sessions = smoke(n_sessions, 150)
+    mk = _workload(n_sessions, seed)
+    kw = dict(n_replicas=n_replicas, inter_arrival=12, seed=seed,
+              kv_ship=ShipCostModel())
+
+    simulate("federated", mk(), **kw)  # warm imports out of the timing
+    t0 = time.perf_counter()
+    off = simulate("federated", mk(), **kw)
+    off_wall = time.perf_counter() - t0
+
+    tr = Tracer()
+    reg = MetricsRegistry()
+    t0 = time.perf_counter()
+    on = simulate("federated", mk(), tracer=tr, registry=reg, **kw)
+    on_wall = time.perf_counter() - t0
+    overhead = on_wall / max(off_wall, 1e-9)
+
+    table("tracing overhead (federated + KV shipping, fleet sim)",
+          ["arm", "wall_s", "spans", "admission_stall"],
+          [["tracer_off", f"{off_wall:.3f}", 0, off.admission_stall_total],
+           ["tracer_on", f"{on_wall:.3f}", len(tr.spans), on.admission_stall_total]])
+    claim("obs: fleet results identical with tracer on (zero-cost-off)",
+          asdict(off) == asdict(on), "")
+    claim("obs: fleet tracing overhead bounded (<= 2.5x wall)",
+          overhead <= 2.5, f"{overhead:.2f}x for {len(tr.spans)} spans")
+    claim("obs: every span closed at drain", not tr.check(),
+          f"{len(tr.check())} open")
+    common.headline(tracing_overhead_x=overhead, spans=len(tr.spans))
+    common.headline_registry(reg)
+    return on, tr, reg
+
+
+def conservation(result, tracer):
+    """queue_wait + dispatch + ship_wait + prefill == admission stall,
+    exactly — per session and in aggregate."""
+    agg_ok = sum(result.phase_cycles.values()) == result.admission_stall_total
+    bad = 0
+    for trace in tracer.traces():
+        phases = tracer.phase_cycles(trace)
+        spans = {s.name: s for s in tracer.for_trace(trace)}
+        root, prefill = spans.get("session"), spans.get("phase.prefill")
+        if root is None or prefill is None or (
+            sum(phases.values()) != prefill.end - root.start
+        ):
+            bad += 1
+    table("latency attribution (cycles, summed over sessions)",
+          ["phase", "cycles"],
+          [[k, v] for k, v in result.phase_cycles.items()]
+          + [["= admission_stall_total", result.admission_stall_total]])
+    claim("obs: attribution conserves cycles in aggregate", agg_ok,
+          f"sum={sum(result.phase_cycles.values())} "
+          f"stall={result.admission_stall_total}")
+    claim("obs: attribution conserves cycles per session", bad == 0,
+          f"{bad} sessions off")
+    common.headline(**{f"phase_{k}": v for k, v in result.phase_cycles.items()})
+    # the attribution, session by session: total stall and its queue-wait
+    # share, sorted by stall — the flame summary's aggregate sibling
+    per = sorted(
+        (sum(tracer.phase_cycles(t).values()),
+         tracer.phase_cycles(t).get("queue_wait", 0))
+        for t in tracer.traces()
+    )
+    ascii_plot("admission stall attribution per session (sorted by stall)",
+               list(range(len(per))),
+               {"stall": [p[0] for p in per], "queue_wait": [p[1] for p in per]})
+
+
+def exporters(tracer, registry):
+    """Exercise the exporter surface at bench scale: the Prometheus text
+    rendering and one per-request flame summary (deepest session)."""
+    prom = render_prometheus(registry)
+    claim("obs: prometheus rendering covers the registry",
+          all(n.split("{")[0] or True for n in registry.names())
+          and len(prom.splitlines()) >= len(registry.names()),
+          f"{len(prom.splitlines())} lines / {len(registry.names())} metrics")
+    deepest = max(tracer.traces(), key=lambda t: len(tracer.for_trace(t)))
+    print()
+    print(flame(tracer, deepest))
+
+
+def run_all():
+    result, tracer, registry = tracing_overhead()
+    conservation(result, tracer)
+    exporters(tracer, registry)

@@ -247,8 +247,36 @@ def kv_shipping(n_sessions=600, n_replicas=4, n_slots=4, cache_budget=500,
     return res
 
 
+def tracing_overhead(n_sessions=600, seed=11):
+    """The observability tier's contract on this bench's own workload: a
+    ``repro.obs.Tracer`` attached to the federated arm changes *nothing*
+    (identical ``FleetResult``, to the integer) and costs bounded wall-clock.
+    The deeper sweep (conservation law, exporters) lives in obs_bench."""
+    import time
+    from dataclasses import asdict
+
+    from repro.obs import Tracer
+
+    n_sessions = smoke(n_sessions, 150)
+    mk = _workload(n_sessions, 12, 96, 16, 32, 0.7, seed)
+    kw = dict(inter_arrival=16, seed=seed, kv_ship=ShipCostModel())
+    t0 = time.perf_counter()
+    off = simulate("federated", mk(), **kw)
+    off_wall = time.perf_counter() - t0
+    tr = Tracer()
+    t0 = time.perf_counter()
+    on = simulate("federated", mk(), tracer=tr, **kw)
+    on_wall = time.perf_counter() - t0
+    overhead = on_wall / max(off_wall, 1e-9)
+    claim("router: tracer attached changes nothing (zero-cost-off)",
+          asdict(off) == asdict(on), "")
+    claim("router: tracing overhead bounded (<= 2.5x wall)",
+          overhead <= 2.5, f"{overhead:.2f}x, {len(tr.spans)} spans")
+
+
 def run_all():
     fleet_routing()
     oracle_agreement()
     sync_staleness()
     kv_shipping()
+    tracing_overhead()

@@ -4,15 +4,23 @@ benches (serving scheduler, slot placement, collective schedules, roofline).
     PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
 Sections: paper, locks, restriction, placement, serving, serving_prefix,
-serving_continuous, router, collectives, moe_ep, roofline.  Default: all.
+serving_continuous, router, obs, collectives, moe_ep, roofline.  Default: all.
 ``serving_prefix`` is the jax-free shared-prefix slice of the serving section
 (prefix-index build/lookup/re-home) so the dependency-light smoke lane can
 cover it; ``serving`` already includes it.  ``router`` (fleet routing on the
-jax-free discrete-event simulator) is smoke-lane-safe as well.
+jax-free discrete-event simulator) and ``obs`` (tracing overhead + the
+attribution conservation law, ``benchmarks/obs_bench.py``) are
+smoke-lane-safe as well.
 ``serving_continuous`` is the continuous-batching slice (needs jax): it — and
 the full ``serving`` section — emits machine-readable ``BENCH_serving.json``
 (tokens/sec, TTFT p50/p99, prefill trace count) so the perf trajectory is
 tracked across PRs; the CI bench lane runs it at smoke scale.
+
+Every section runs inside ``benchmarks.common.bench_section`` and emits a
+``BENCH_<section>.json`` record in one shared schema — claims, headline
+metrics (sourced from the unified ``repro.obs.MetricsRegistry`` where the
+section keeps one), pass/fail — so the bench trajectory file set covers the
+whole suite, not just serving.
 
 ``--smoke`` shrinks every iteration knob (see benchmarks.common.smoke) so CI
 can exercise each benchmark's code path in seconds; claims still print but do
@@ -65,52 +73,70 @@ def main() -> int:
         common.SMOKE = True
     sections = args or [
         "paper", "locks", "restriction", "placement", "serving", "router",
-        "collectives", "moe_ep", "roofline",
+        "obs", "collectives", "moe_ep", "roofline",
     ]  # "serving" subsumes serving_prefix and serving_continuous
     t0 = time.time()
+    # every section runs inside bench_section so it emits BENCH_<name>.json
+    # in the shared schema (claims, headline metrics, pass/fail)
     if "paper" in sections:
         from . import paper_figures
 
-        paper_figures.run_all()
+        with common.bench_section("paper"):
+            paper_figures.run_all()
     if "locks" in sections:
-        locks_hostlevel()
+        with common.bench_section("locks"):
+            locks_hostlevel()
     if "restriction" in sections:
         from . import restriction_bench
 
-        restriction_bench.run_all()
+        with common.bench_section("restriction"):
+            restriction_bench.run_all()
     if "placement" in sections:
         from . import placement_bench
 
-        placement_bench.run_all()
+        with common.bench_section("placement"):
+            placement_bench.run_all()
     if "serving" in sections:
         from . import serving_bench
 
-        serving_bench.run_all(json_path="BENCH_serving.json")
+        with common.bench_section("serving"):
+            serving_bench.run_all(json_path="BENCH_serving.json")
     else:
         if "serving_prefix" in sections:
             from . import serving_bench
 
-            serving_bench.shared_prefix()
+            with common.bench_section("serving_prefix"):
+                serving_bench.shared_prefix()
         if "serving_continuous" in sections:
             from . import serving_bench
 
-            serving_bench.continuous(json_path="BENCH_serving.json")
+            with common.bench_section("serving"):
+                serving_bench.continuous(json_path="BENCH_serving.json")
     if "router" in sections:
         from . import router_bench
 
-        router_bench.run_all()
+        with common.bench_section("router"):
+            router_bench.run_all()
+    if "obs" in sections:
+        from . import obs_bench
+
+        with common.bench_section("obs"):
+            obs_bench.run_all()
     if "collectives" in sections:
         from . import collectives_bench
 
-        collectives_bench.run_all()
+        with common.bench_section("collectives"):
+            collectives_bench.run_all()
     if "moe_ep" in sections:
         from . import moe_ep_bench
 
-        moe_ep_bench.run_all()
+        with common.bench_section("moe_ep"):
+            moe_ep_bench.run_all()
     if "roofline" in sections:
         from . import roofline_report
 
-        roofline_report.run_all()
+        with common.bench_section("roofline"):
+            roofline_report.run_all()
     print(f"\n(total: {time.time() - t0:.1f}s)")
     if common.FAILED_CLAIMS:
         print(f"{len(common.FAILED_CLAIMS)} claim(s) FAILED:")

@@ -74,6 +74,9 @@ class CNAAdmissionQueue(Generic[T]):
         if max_active is not None:
             self._d = RestrictedDiscipline(self._d, max_active=max_active, rotate_after=rotate_after)
         self.stats = PolicyStats()
+        # the most recent pop's Grant — kind + discipline events survive the
+        # (value, domain) narrowing so tracers can attach them to spans
+        self.last_grant = None
 
     @property
     def controller(self):
@@ -112,6 +115,7 @@ class CNAAdmissionQueue(Generic[T]):
         if g is None:
             return None
         self.stats.consume(g)
+        self.last_grant = g
         return g.item, g.domain
 
     def drain(self) -> list[tuple[T, int]]:
@@ -139,6 +143,8 @@ class FIFOAdmissionQueue(Generic[T]):
         if max_active is not None:
             self._d = RestrictedDiscipline(self._d, max_active=max_active, rotate_after=rotate_after)
         self.stats = PolicyStats()
+        # most recent pop's Grant (see CNAAdmissionQueue.last_grant)
+        self.last_grant = None
 
     @property
     def controller(self):
@@ -171,6 +177,7 @@ class FIFOAdmissionQueue(Generic[T]):
         if g is None:
             return None
         self.stats.consume(g)
+        self.last_grant = g
         return g.item, g.domain
 
     def drain(self) -> list[tuple[T, int]]:

@@ -38,6 +38,32 @@ from repro.serving.engine import DecodeEngine, Request
 from repro.serving.scheduler import CNAScheduler, FIFOScheduler
 
 
+def _mk_obs(args):
+    """--trace/--metrics: one Tracer + MetricsRegistry per driver run (both
+    None-off, so the default path stays zero-cost)."""
+    from repro.obs import MetricsRegistry, Tracer
+
+    tracer = Tracer() if args.trace else None
+    registry = MetricsRegistry() if args.metrics else None
+    return tracer, registry
+
+
+def _emit_obs(args, tracer, registry, trace_path=None):
+    from repro.obs import flame, render_prometheus, to_jsonl
+
+    if tracer is not None:
+        path = trace_path or args.trace
+        n = to_jsonl(tracer, path)
+        print(f"[trace] wrote {n} spans to {path}")
+        traces = tracer.traces()
+        if traces:
+            deepest = max(traces, key=lambda t: len(tracer.for_trace(t)))
+            print(flame(tracer, deepest))
+    if registry is not None:
+        print("[metrics]")
+        print(render_prometheus(registry))
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-8b")
@@ -69,6 +95,14 @@ def main(argv=None) -> int:
     ap.add_argument("--no-batching", action="store_true",
                     help="with --arrivals: use the per-request prefill engine "
                          "instead of the bucketed/packed batched one")
+    ap.add_argument("--trace", metavar="OUT.jsonl", default=None,
+                    help="record causal request spans (repro.obs.Tracer), "
+                         "dump them as JSONL to OUT.jsonl and print one "
+                         "ASCII flame summary for the deepest trace")
+    ap.add_argument("--metrics", action="store_true",
+                    help="register every stat surface into the unified "
+                         "repro.obs.MetricsRegistry and print its "
+                         "Prometheus-style rendering at exit")
     args = ap.parse_args(argv)
 
     if args.arrivals is not None:
@@ -114,10 +148,22 @@ def main(argv=None) -> int:
     policies = {"cna": lambda **kw: CNAScheduler(fairness_threshold=args.fairness_threshold, **kw),
                 "fifo": lambda **kw: FIFOScheduler(**kw)}
     run = [args.scheduler] if args.scheduler != "both" else ["cna", "fifo"]
+    registry = None
+    if args.metrics:
+        from repro.obs import MetricsRegistry
+
+        registry = MetricsRegistry()
     for name in run:
+        # a fresh tracer per policy: the two arms reuse request ids, and one
+        # JSONL per arm keeps the traces causally clean
+        tracer = None
+        if args.trace:
+            from repro.obs import Tracer
+
+            tracer = Tracer()
         reqs = [Request(r.rid, r.prompt, r.max_new, r.domain) for r in base]
         eng = DecodeEngine(model, params, n_slots=args.slots, cache_len=args.cache_len,
-                           domain_switch_cost=args.switch_cost,
+                           domain_switch_cost=args.switch_cost, tracer=tracer,
                            **engine_kwargs(policies[name]))
         t0 = time.time()
         if args.derived_homes:
@@ -139,6 +185,12 @@ def main(argv=None) -> int:
               f"locality={m.locality:.2f} switches={m.domain_switches} "
               f"fairness={m.fairness_factor():.3f} wall={wall:.1f}s "
               f"tok_per_simtick={tokens / max(1, eng.sim_time):.2f}{extra}")
+        if registry is not None:
+            eng.register_metrics(registry, prefix=f"{name}_engine")
+        if tracer is not None:
+            path = args.trace if len(run) == 1 else f"{name}.{args.trace}"
+            _emit_obs(args, tracer, None, trace_path=path)
+    _emit_obs(args, None, registry)
     return 0
 
 
@@ -162,10 +214,12 @@ def serve_arrivals(args) -> int:
     ).astype(int).tolist()
 
     batched = not args.no_batching
+    tracer, registry = _mk_obs(args)
     t_build = time.time()
     eng = DecodeEngine(model, params, n_slots=args.slots, cache_len=args.cache_len,
                        scheduler=CNAScheduler(fairness_threshold=args.fairness_threshold),
-                       domain_switch_cost=args.switch_cost, batching=batched)
+                       domain_switch_cost=args.switch_cost, batching=batched,
+                       tracer=tracer)
     warm = time.time() - t_build  # AOT bucket traces compile in here, not below
 
     submit_at, ttft = {}, {}
@@ -194,6 +248,9 @@ def serve_arrivals(args) -> int:
           f"ttft_p99={np.percentile(waits, 99) * 1e3:.0f}ms "
           f"prefill_traces={traces} decode_traces={cc['decode']} "
           f"warmup={warm:.1f}s wall={wall:.1f}s")
+    if registry is not None:
+        eng.register_metrics(registry)
+    _emit_obs(args, tracer, registry)
     return 0
 
 
@@ -220,18 +277,21 @@ def serve_fleet(args) -> int:
                 decode_len=args.max_new)
         for i in range(args.requests)
     ]
+    tracer, registry = _mk_obs(args)
     replicas = [
         EngineReplica(r, DecodeEngine(
             model, params, n_slots=args.slots, cache_len=args.cache_len,
             scheduler=CNAScheduler(fairness_threshold=args.fairness_threshold,
                                    topology=pod(1, args.domains)),
             placement="nearest_spill", prefix_index=True, prefix_kv=True,
-            domain_switch_cost=args.switch_cost,
+            domain_switch_cost=args.switch_cost, tracer=tracer,
         ))
         for r in range(args.replicas)
     ]
+    # the shared tracer nests each engine's "request" span under the router's
+    # "session" span (same trace key), giving the one-trace-every-level view
     router = ReplicaRouter(replicas, sync_every=args.sync_every,
-                           kv_ship=not args.no_kv_ship)
+                           kv_ship=not args.no_kv_ship, tracer=tracer)
 
     t0 = time.time()
     i = done = 0
@@ -273,6 +333,14 @@ def serve_fleet(args) -> int:
               f"reused_positions={eng.reused_positions} "
               f"prefix_hit_rate={eng.slots.telemetry.prefix_hit_rate:.2f} "
               f"cap={router.fleet.cap(rep.rid)}")
+    if registry is not None:
+        router.stats.register_into(registry)
+        router.scheduler.metrics.register_into(registry, prefix="router_sched")
+        if router.fabric is not None:
+            router.fabric.stats.register_into(registry)
+        for rep in replicas:
+            rep.engine.register_metrics(registry, prefix=f"replica{rep.rid}")
+    _emit_obs(args, tracer, registry)
     return 0
 
 

@@ -1,0 +1,45 @@
+"""Unified observability: causal request traces + one metrics registry.
+
+The paper's whole argument is an attribution claim — CNA wins because lock
+handovers stay on-socket, and you can *count* where the cycles went.  This
+package is that discipline applied to the repo itself:
+
+  ``trace``     ``Tracer``/``Span``: causally-linked, deterministic-clock
+                spans per request (``submit → home-derivation → queue-wait →
+                shed → ship(price/wait/transfer) → admit → migrate →
+                prefill(fresh|cont|reuse) → decode → retire``), with
+                discipline-level events (``Grant``/``Shuffle``/
+                ``SecondaryFlush``) attached as span events;
+  ``registry``  ``MetricsRegistry``: counters, gauges, and bounded
+                histograms (p50/p99 under a memory cap) that the four legacy
+                stat surfaces (``SchedulerMetrics``, ``PlacementTelemetry``,
+                ``RouterStats``, ``ShipStats``) register into as thin views
+                — no call-site API changes;
+  ``export``    JSONL trace dump, Prometheus-style text rendering, and an
+                ASCII per-request flame summary.
+
+Zero-cost-off is a hard contract: every instrumentation site guards on the
+tracer's truthiness (``NULL_TRACER`` is falsy), never consumes shared RNG
+streams, and never changes control flow — tracing disabled is bitwise
+identical to the pre-instrumentation code, and the cross-driver grant-order
+tests pin it.
+"""
+
+from .export import flame, render_prometheus, to_jsonl
+from .registry import BoundedHistogram, Counter, Gauge, MetricsRegistry
+from .trace import NULL_TRACER, NullTracer, Span, Tracer, trace_key
+
+__all__ = [
+    "BoundedHistogram",
+    "Counter",
+    "Gauge",
+    "MetricsRegistry",
+    "NULL_TRACER",
+    "NullTracer",
+    "Span",
+    "Tracer",
+    "flame",
+    "render_prometheus",
+    "to_jsonl",
+    "trace_key",
+]

@@ -1,0 +1,91 @@
+"""Exporters: JSONL traces, Prometheus text, ASCII flame summaries.
+
+Self-contained (no dependency on the ``benchmarks`` package, whose import
+resolution depends on cwd) — the bench sections layer ``ascii_plot`` over
+these for aggregate views, while ``flame`` here renders the per-request
+causal picture a trace exists to answer: *where did this session's TTFT
+go?*
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any, IO
+
+from .registry import MetricsRegistry
+from .trace import Span, Tracer
+
+
+def to_jsonl(tracer: Tracer, path_or_file: str | IO) -> int:
+    """Dump every span as one JSON object per line; returns the span count."""
+    own = isinstance(path_or_file, str)
+    f = open(path_or_file, "w") if own else path_or_file
+    try:
+        n = 0
+        for sp in tracer:
+            f.write(json.dumps(sp.to_dict(), default=str) + "\n")
+            n += 1
+        return n
+    finally:
+        if own:
+            f.close()
+
+
+def from_jsonl(path_or_file: str | IO) -> list[dict]:
+    """Read a JSONL trace dump back as a list of span dicts."""
+    own = isinstance(path_or_file, str)
+    f = open(path_or_file) if own else path_or_file
+    try:
+        return [json.loads(line) for line in f if line.strip()]
+    finally:
+        if own:
+            f.close()
+
+
+def render_prometheus(registry: MetricsRegistry) -> str:
+    return registry.render_prometheus()
+
+
+def _children(spans: list[Span]) -> dict:
+    kids: dict = {None: []}
+    by_id = {sp.span_id: sp for sp in spans}
+    for sp in spans:
+        parent = sp.parent_id if sp.parent_id in by_id else None
+        kids.setdefault(parent, []).append(sp)
+    for v in kids.values():
+        v.sort(key=lambda s: (s.start, s.span_id))
+    return kids
+
+
+def flame(tracer: Tracer, trace: Any, width: int = 64) -> str:
+    """ASCII flame summary of one trace: each span a bar positioned and
+    scaled on the trace's own clock, children indented under parents.
+
+        session #s3                              [0, 1220]
+        ├─ ████████░░░░░░░░  queue_wait      180 cy
+        ...
+    """
+    spans = tracer.for_trace(trace)
+    if not spans:
+        return f"(no spans for trace {trace!r})"
+    t0 = min(sp.start for sp in spans)
+    t1 = max(max(sp.end, sp.start) for sp in spans)
+    extent = max(1, t1 - t0)
+    kids = _children(spans)
+    lines = [f"trace {trace!r}  [{t0}, {t1}]  ({len(spans)} spans)"]
+
+    def emit(sp: Span, depth: int) -> None:
+        lo = int((sp.start - t0) / extent * width)
+        hi = max(lo + 1, int((max(sp.end, sp.start) - t0) / extent * width))
+        bar = "." * lo + "#" * (hi - lo) + "." * (width - hi)
+        dur = "open" if sp.open else f"{sp.duration} cy"
+        extra = ""
+        if "kind" in sp.attrs:
+            extra = f" [{sp.attrs['kind']}]"
+        lines.append(f"  {'  ' * depth}{bar}  {sp.name}{extra}  {dur}")
+        for child in kids.get(sp.span_id, ()):
+            emit(child, depth + 1)
+
+    for root in kids[None]:
+        emit(root, 0)
+    return "\n".join(lines)

@@ -1,0 +1,242 @@
+"""One metrics registry over four legacy counter surfaces.
+
+``MetricsRegistry`` holds three metric kinds — ``Counter``, ``Gauge``
+(optionally backed by a callable so legacy dataclass fields register as
+*views* with zero call-site changes), and ``BoundedHistogram`` — and renders
+them uniformly (``collect()`` dict, Prometheus-style text).
+
+``BoundedHistogram`` is the fix for the unbounded sample lists
+(``SchedulerMetrics.waits``, ``RouterStats.stalls``): list-compatible
+(``append``/``len``/index/iterate, so ``np.array(m.waits)`` and
+``sorted(stats.stalls)`` keep working), exact up to ``cap`` samples, then a
+deterministic reservoir (private ``random.Random`` seed — never the shared
+discipline RNG streams) keeps a uniform subsample while ``n``/``total``/
+``vmin``/``vmax`` stay exact.  Default caps exceed every bench's sample
+count, so swapping the lists changes no published number.
+"""
+
+from __future__ import annotations
+
+import random
+import re
+from typing import Any, Callable, Iterator
+
+_NAME_OK = re.compile(r"[^a-zA-Z0-9_:]")
+
+
+def _sanitize(name: str) -> str:
+    return _NAME_OK.sub("_", name)
+
+
+class Counter:
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Gauge:
+    """A settable value, or a live view when constructed with ``fn``."""
+
+    __slots__ = ("name", "_value", "fn")
+
+    def __init__(self, name: str, fn: Callable[[], Any] | None = None) -> None:
+        self.name = name
+        self._value = 0
+        self.fn = fn
+
+    def set(self, v) -> None:
+        self._value = v
+
+    @property
+    def value(self):
+        return self.fn() if self.fn is not None else self._value
+
+
+class BoundedHistogram:
+    """Bounded sample reservoir with exact quantiles under the cap.
+
+    Behaves like the list it replaces (append / len / index / iterate) but
+    retains at most ``cap`` samples: Vitter's algorithm R over a private
+    seeded RNG once full.  ``n`` (true count), ``total``, ``vmin``/``vmax``
+    are always exact; ``percentile`` is exact while ``n <= cap`` and an
+    unbiased estimate beyond.
+    """
+
+    __slots__ = ("cap", "n", "total", "vmin", "vmax", "_samples", "_rng")
+
+    def __init__(self, cap: int = 8192, seed: int = 0x0B5E) -> None:
+        if cap < 1:
+            raise ValueError("cap must be >= 1")
+        self.cap = cap
+        self.n = 0
+        self.total = 0
+        self.vmin: float | None = None
+        self.vmax: float | None = None
+        self._samples: list = []
+        self._rng = random.Random(seed)
+
+    def append(self, v) -> None:
+        self.n += 1
+        self.total += v
+        self.vmin = v if self.vmin is None else min(self.vmin, v)
+        self.vmax = v if self.vmax is None else max(self.vmax, v)
+        if len(self._samples) < self.cap:
+            self._samples.append(v)
+        else:
+            j = self._rng.randrange(self.n)
+            if j < self.cap:
+                self._samples[j] = v
+
+    observe = append
+
+    def extend(self, vs) -> None:
+        for v in vs:
+            self.append(v)
+
+    def __len__(self) -> int:
+        return len(self._samples)
+
+    def __getitem__(self, i):
+        return self._samples[i]
+
+    def __iter__(self) -> Iterator:
+        return iter(self._samples)
+
+    def __bool__(self) -> bool:
+        return bool(self._samples)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.n if self.n else 0.0
+
+    def percentile(self, q: float):
+        """Nearest-rank percentile of the retained samples, ``q`` in [0, 100]."""
+        if not self._samples:
+            return 0
+        s = sorted(self._samples)
+        return s[min(len(s) - 1, int(q / 100.0 * len(s)))]
+
+    def summary(self) -> dict:
+        return {
+            "count": self.n,
+            "sum": self.total,
+            "min": self.vmin if self.vmin is not None else 0,
+            "max": self.vmax if self.vmax is not None else 0,
+            "mean": self.mean,
+            "p50": self.percentile(50),
+            "p99": self.percentile(99),
+            "retained": len(self._samples),
+        }
+
+
+class MetricsRegistry:
+    """Named counters, gauges, histograms — one surface, many sources.
+
+    Legacy stat objects register via ``adopt``: each numeric attribute (and
+    any named property) becomes a live ``Gauge`` view, each
+    ``BoundedHistogram`` attribute is attached under its own name, and dict
+    attributes render as labeled gauges.  The legacy object stays the
+    single source of truth; the registry reads through.
+    """
+
+    def __init__(self) -> None:
+        self._metrics: dict[str, Any] = {}
+
+    def _put(self, name: str, metric):
+        self._metrics[name] = metric
+        return metric
+
+    def counter(self, name: str) -> Counter:
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._put(name, Counter(name))
+        return m
+
+    def gauge(self, name: str, fn: Callable[[], Any] | None = None) -> Gauge:
+        m = self._metrics.get(name)
+        if m is None or fn is not None:
+            m = self._put(name, Gauge(name, fn))
+        return m
+
+    view = gauge
+
+    def histogram(self, name: str, cap: int = 8192, seed: int = 0x0B5E) -> BoundedHistogram:
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._put(name, BoundedHistogram(cap, seed))
+        return m
+
+    def attach(self, name: str, hist: BoundedHistogram) -> BoundedHistogram:
+        """Register an existing histogram (e.g. ``SchedulerMetrics.waits``)."""
+        return self._put(name, hist)
+
+    def adopt(self, prefix: str, obj: Any, fields=None, props=()) -> None:
+        """Register a legacy stats object's numeric surface as live views.
+
+        ``fields`` defaults to every public attribute holding an int/float,
+        dict, or ``BoundedHistogram``; ``props`` names derived properties
+        (``locality``, ``hit_rate``, …) to expose as gauges too.
+        """
+        names = fields if fields is not None else [
+            a for a in vars(obj) if not a.startswith("_")
+        ]
+        for attr in names:
+            v = getattr(obj, attr)
+            name = f"{prefix}_{attr}"
+            if isinstance(v, BoundedHistogram):
+                self.attach(name, v)
+            elif isinstance(v, dict):
+                self.gauge(name, fn=(lambda o=obj, a=attr: dict(getattr(o, a))))
+            elif isinstance(v, (int, float)):
+                self.gauge(name, fn=(lambda o=obj, a=attr: getattr(o, a)))
+        for prop in props:
+            self.gauge(f"{prefix}_{prop}", fn=(lambda o=obj, p=prop: getattr(o, p)))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._metrics
+
+    def __getitem__(self, name: str):
+        return self._metrics[name]
+
+    def names(self) -> list[str]:
+        return list(self._metrics)
+
+    def collect(self) -> dict:
+        """Snapshot every metric as plain python values (JSON-safe)."""
+        out: dict = {}
+        for name, m in self._metrics.items():
+            if isinstance(m, BoundedHistogram):
+                out[name] = m.summary()
+            else:
+                out[name] = m.value
+        return out
+
+    def render_prometheus(self) -> str:
+        """Prometheus-style text exposition of the current snapshot."""
+        lines: list[str] = []
+        for name, m in self._metrics.items():
+            pname = _sanitize(name)
+            if isinstance(m, Counter):
+                lines.append(f"# TYPE {pname} counter")
+                lines.append(f"{pname} {m.value}")
+            elif isinstance(m, BoundedHistogram):
+                lines.append(f"# TYPE {pname} summary")
+                lines.append(f'{pname}{{quantile="0.5"}} {m.percentile(50)}')
+                lines.append(f'{pname}{{quantile="0.99"}} {m.percentile(99)}')
+                lines.append(f"{pname}_count {m.n}")
+                lines.append(f"{pname}_sum {m.total}")
+            else:
+                v = m.value
+                if isinstance(v, dict):
+                    lines.append(f"# TYPE {pname} gauge")
+                    for k, kv in sorted(v.items(), key=lambda e: str(e[0])):
+                        lines.append(f'{pname}{{key="{k}"}} {kv}')
+                else:
+                    lines.append(f"# TYPE {pname} gauge")
+                    lines.append(f"{pname} {v}")
+        return "\n".join(lines) + "\n"

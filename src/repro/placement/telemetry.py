@@ -34,6 +34,11 @@ class PlacementTelemetry:
     per_domain_placements: dict = field(default_factory=dict)
     per_domain_occupancy: dict = field(default_factory=dict)  # live claims
     peak_occupancy: dict = field(default_factory=dict)
+    # releases for domains with no live recorded placement (double release or
+    # a release routed to the wrong domain); counted, never applied — the
+    # derived-home tie-breaks read per_domain_occupancy and a negative entry
+    # would bias them toward a domain that was never occupied
+    unmatched_releases: int = 0
 
     @property
     def locality(self) -> float:
@@ -64,7 +69,11 @@ class PlacementTelemetry:
 
     def record_release(self, slot_domain: int) -> None:
         self.releases += 1
-        self.per_domain_occupancy[slot_domain] = self.per_domain_occupancy.get(slot_domain, 0) - 1
+        occ = self.per_domain_occupancy.get(slot_domain, 0)
+        if occ <= 0:
+            self.unmatched_releases += 1
+            return
+        self.per_domain_occupancy[slot_domain] = occ - 1
 
     def record_shed(self) -> None:
         self.sheds += 1
@@ -92,3 +101,12 @@ class PlacementTelemetry:
             return 1.0
         half = max(1, len(counts) // 2)
         return sum(counts[:half]) / tot
+
+    def register_into(self, registry, prefix: str = "placement") -> None:
+        """Expose this surface through a ``repro.obs.MetricsRegistry`` as
+        thin live views (no counter moves; the registry reads through)."""
+        registry.adopt(
+            prefix, self,
+            props=("locality", "spills", "mean_handover", "prefix_hit_rate"),
+        )
+        registry.gauge(f"{prefix}_fairness_factor", fn=self.fairness_factor)

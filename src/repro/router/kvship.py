@@ -176,6 +176,11 @@ class ShipStats:
     ship_cycles: int = 0           # transfer ticks spent (setup + bytes)
     wait_cycles: int = 0           # ticks ships queued behind the pipe
 
+    def register_into(self, registry, prefix: str = "ship") -> None:
+        """Expose this surface through a ``repro.obs.MetricsRegistry`` as
+        thin live views — the dataclass stays the single source of truth."""
+        registry.adopt(prefix, self)
+
 
 class Fabric:
     """The serialized KV-transfer pipe between replicas.

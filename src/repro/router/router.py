@@ -44,6 +44,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from repro.core.topology import Topology, flat, get_topology
+from repro.obs import BoundedHistogram
 from repro.serving.scheduler import CNAScheduler
 
 from .federation import FederatedPrefixIndex
@@ -89,7 +90,10 @@ class RouterStats:
     reprefill_tokens: int = 0     # prompt tokens the target replica had to
     routed_tokens: int = 0        # recompute, vs all routed prompt tokens
     local_hits: int = 0           # dispatches whose target held >=1 token
-    stalls: list = field(default_factory=list)
+    # bounded stall reservoir: list-compatible (append/len/index/iterate)
+    # but capped, so a long-running router can't leak one entry per dispatch;
+    # quantiles stay exact while under the cap (every bench stays under it)
+    stalls: BoundedHistogram = field(default_factory=BoundedHistogram)
     # KV shipping (repro.router.kvship); tokens in tokens, cycles in router
     # ticks.  reprefill_avoided counts prompt tokens the target would have
     # recomputed had the shipped prefix not arrived first.
@@ -109,6 +113,11 @@ class RouterStats:
         """Fraction of routed prompt tokens already cached on the replica
         that served them — the fleet-level locality number."""
         return 1.0 - self.reprefill_tokens / max(1, self.routed_tokens)
+
+    def register_into(self, registry, prefix: str = "router") -> None:
+        """Expose this surface through a ``repro.obs.MetricsRegistry`` as
+        thin live views — the dataclass stays the single source of truth."""
+        registry.adopt(prefix, self, props=("hit_rate", "reuse_fraction"))
 
 
 class ReplicaRouter:
@@ -137,6 +146,7 @@ class ReplicaRouter:
         max_age: int | None = None,
         controller: FleetController | None = None,
         kv_ship: "bool | ShipCostModel | None" = None,
+        tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
     ) -> None:
         self.replicas = list(replicas)
         n = len(self.replicas)
@@ -155,8 +165,12 @@ class ReplicaRouter:
             max_age=max_age,
         )
         self.scheduler = CNAScheduler(
-            fairness_threshold=fairness_threshold, seed=seed, topology=topo
+            fairness_threshold=fairness_threshold, seed=seed, topology=topo,
+            tracer=tracer,
         )
+        # one tracer for router + scheduler (NULL_TRACER when off): session
+        # root spans open here, the scheduler's queue_wait spans nest inside
+        self.tracer = self.scheduler.tracer
         self.fleet = (
             controller
             if controller is not None
@@ -218,6 +232,14 @@ class ReplicaRouter:
         home, matched = self.federation.route(session.prompt, now=self.now)
         session.home, session.matched_len = home, matched
         session.submit_t = self.now
+        if self.tracer:
+            self.tracer.begin(
+                "session", session.sid, self.now, prompt_len=len(session.prompt)
+            )
+            self.tracer.span(
+                "home_derivation", session.sid, self.now, self.now,
+                home=home, matched=matched,
+            )
         self.federation.note_steered(home)
         self.scheduler.submit(session, home)
         return home
@@ -267,10 +289,21 @@ class ReplicaRouter:
                                self.fleet.inflight[r], r),
             )
             self.stats.sheds += 1
+            if self.tracer:
+                self.tracer.span(
+                    "shed", session.sid, self.now, self.now,
+                    home=session.home, to=target,
+                    distance=self.topology.distance(session.home, target),
+                )
         dist = 0 if target == prev else self.topology.distance(prev, target)
         self._last_target = target
         session.replica = target
         session.dispatch_t = self.now
+        if self.tracer:
+            self.tracer.span(
+                "dispatch", session.sid, self.now, self.now,
+                replica=target, steer_distance=dist,
+            )
         session.ship = self._maybe_ship(session, target)
         # admit first: if the replica rejects (raises), the fleet controller
         # must not be left with a phantom in-flight admission nobody will
@@ -330,6 +363,7 @@ class ReplicaRouter:
         )
         if d.choice != "ship":
             self.stats.ship_declined += 1
+            self._trace_ship(session, d)
             return d
         # from here the argmin chose ship; a refusal below is a *failure*
         # (ship_failed), not a price decline, and the dispatch falls back to
@@ -338,6 +372,7 @@ class ReplicaRouter:
         exported = self.replicas[src].export_kv(prompt)
         if exported is None:        # store churned between peek and export
             self.stats.ship_failed += 1
+            self._trace_ship(session, d, failed=True)
             return d
         tokens, payload = exported
         # import before booking anything: a target that refuses the bundle
@@ -349,9 +384,11 @@ class ReplicaRouter:
             tokens, payload, ready_t=self.fabric.projected_end(self.now, d)
         ):
             self.stats.ship_failed += 1
+            self._trace_ship(session, d, failed=True)
             return d
         self.fabric.reserve(self.now, d)
         d.executed = True
+        self._trace_ship(session, d)
         # NB: ship effects necessarily precede admit() (the import is what
         # admit's prefill reuse must see); the headroom check above is what
         # keeps admit from raising, so an exception here means a replica
@@ -362,6 +399,38 @@ class ReplicaRouter:
         s.ship_cycles += d.ship_cycles
         s.reprefill_avoided += len(tokens) - local
         return d
+
+    def _trace_ship(self, session: Session, d: ShipDecision, *, failed: bool = False) -> None:
+        """Record one priced ship decision as a span (either outcome): the
+        price itself as an instant child, and — when the transfer actually
+        ran — ``ship.wait`` (fabric backlog) and ``ship.transfer`` (the
+        reserved pipe interval, ending at ``fabric_end``) as child spans."""
+        if not self.tracer:
+            return
+        now = self.now
+        end = d.fabric_end if d.executed else now
+        sp = self.tracer.span(
+            "ship", session.sid, now, end,
+            src=d.src, dst=d.dst, distance=d.distance, choice=d.choice,
+            executed=d.executed, failed=failed,
+        )
+        self.tracer.span(
+            "ship.price", session.sid, now, now, parent=sp,
+            ship_total=d.ship_total, reprefill_cycles=d.reprefill_cycles,
+            wait_cycles=d.wait_cycles, ship_cycles=d.ship_cycles,
+            suffix_cycles=d.suffix_cycles, src_matched=d.src_matched,
+            local_matched=d.local_matched,
+        )
+        if d.executed:
+            start = d.fabric_end - d.ship_cycles
+            self.tracer.span(
+                "ship.wait", session.sid, now, start, parent=sp,
+                cycles=start - now,
+            )
+            self.tracer.span(
+                "ship.transfer", session.sid, start, d.fabric_end, parent=sp,
+                cycles=d.ship_cycles, tokens=d.src_matched,
+            )
 
     def dispatch(self) -> list[tuple[Session, int, int]]:
         """Drain dispatches until out of queue or headroom."""
@@ -376,6 +445,10 @@ class ReplicaRouter:
         first token, in router-clock units) feeds the fleet controller's
         GCR loop."""
         session.finish_t = self.now
+        if self.tracer:
+            root = self.tracer.open_span(session.sid, "session")
+            self.tracer.event(root, "retire", self.now, replica=session.replica)
+            self.tracer.end(root, self.now)
         self.fleet.note_finish(session.replica)
         if ttft is not None:
             self.fleet.observe_ttft(session.replica, ttft)

@@ -240,10 +240,11 @@ class _BaselineRouter:
     (FIFO dispatch, no federation, same capacity gating and completion
     accounting, so the comparison isolates the routing policy)."""
 
-    def __init__(self, replicas, *, policy: str, topology=None) -> None:
+    def __init__(self, replicas, *, policy: str, topology=None, tracer=None) -> None:
         from collections import deque
 
         from repro.core.topology import flat, get_topology
+        from repro.obs import NULL_TRACER
 
         from .router import RouterStats
 
@@ -258,6 +259,7 @@ class _BaselineRouter:
         self._rr = 0
         self._prev = 0
         self.stats = RouterStats()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
 
     @property
     def now(self) -> int:
@@ -279,6 +281,10 @@ class _BaselineRouter:
     def submit(self, session: Session) -> int:
         session.submit_t = self.now
         session.home = 0
+        if self.tracer:
+            self.tracer.begin(
+                "session", session.sid, self.now, prompt_len=len(session.prompt)
+            )
         self._q.append(session)
         return 0
 
@@ -307,6 +313,15 @@ class _BaselineRouter:
         session.dispatch_t = self.now
         dist = 0 if target == self._prev else self.topology.distance(self._prev, target)
         self._prev = target
+        if self.tracer:
+            self.tracer.span(
+                "queue_wait", session.sid, session.submit_t, self.now,
+                domain=target, kind=self.policy,
+            )
+            self.tracer.span(
+                "dispatch", session.sid, self.now, self.now,
+                replica=target, steer_distance=dist,
+            )
         session.local_matched = self.replicas[target].admit(session, self.now)
         self.stats.dispatched += 1
         self.stats.routed_tokens += len(session.prompt)
@@ -318,6 +333,8 @@ class _BaselineRouter:
 
     def complete(self, session: Session, *, ttft=None) -> None:
         session.finish_t = self.now
+        if self.tracer:
+            self.tracer.end(self.tracer.open_span(session.sid, "session"), self.now)
 
 
 @dataclass
@@ -349,6 +366,11 @@ class FleetResult:
     shipped_tokens: int = 0
     ship_cycles: int = 0
     reprefill_avoided: int = 0
+    # latency attribution: admission stall decomposed per phase, summed over
+    # sessions.  Conservation law (property-tested): queue_wait + dispatch +
+    # ship_wait + prefill == admission_stall_total, exactly — the same
+    # identity each session's phase.* trace spans satisfy individually.
+    phase_cycles: dict = field(default_factory=dict)
 
     @property
     def fairness_factor(self) -> float:
@@ -379,13 +401,16 @@ def shared_prefix_sessions(
     ]
 
 
-def make_router(arm: str, replicas, *, topology=None, seed: int = 0xF1EE7, **kw):
+def make_router(
+    arm: str, replicas, *, topology=None, seed: int = 0xF1EE7, tracer=None, **kw
+):
     """Build the routing arm: ``federated`` (the tier under test) or the
-    ``round_robin`` / ``least_loaded`` controls."""
+    ``round_robin`` / ``least_loaded`` controls.  ``tracer`` threads a
+    ``repro.obs.Tracer`` through either arm (None => zero-cost off)."""
     if arm == "federated":
-        return ReplicaRouter(replicas, topology=topology, seed=seed, **kw)
+        return ReplicaRouter(replicas, topology=topology, seed=seed, tracer=tracer, **kw)
     if arm in ("round_robin", "least_loaded"):
-        return _BaselineRouter(replicas, policy=arm, topology=topology)
+        return _BaselineRouter(replicas, policy=arm, topology=topology, tracer=tracer)
     raise KeyError(f"unknown routing arm {arm!r}")
 
 
@@ -402,6 +427,8 @@ def simulate(
     seed: int = 42,
     kv_ship=None,
     router_kwargs: dict | None = None,
+    tracer=None,
+    registry=None,
 ) -> FleetResult:
     """Run ``sessions`` through a fleet under one routing arm; returns the
     aggregate ``FleetResult``.  Event loop: arrivals are scheduled up front
@@ -415,7 +442,14 @@ def simulate(
     chosen ship queues on the serialized fabric pipe and the session's first
     token waits for max(dispatch, transfer) before prefilling only the
     unshipped suffix.  The ship model's ``c_prefill`` is re-pinned to this
-    run's ``cm.c_prefill`` so the argmin prices the machine that executes."""
+    run's ``cm.c_prefill`` so the argmin prices the machine that executes.
+
+    ``tracer`` (a ``repro.obs.Tracer``, any arm): per-session causal spans
+    plus the attribution layer — ``phase.queue_wait`` / ``phase.dispatch`` /
+    ``phase.ship_wait`` / ``phase.prefill`` spans whose cycles sum *exactly*
+    to that session's admission stall (submit -> first token).  ``registry``
+    (a ``repro.obs.MetricsRegistry``): the run's stat surfaces register into
+    it as live views.  Both default off and never perturb the run."""
     cm = cm or FleetCostModel()
     rng = random.Random(seed)
     replicas = [
@@ -435,7 +469,7 @@ def simulate(
         scm = ShipCostModel() if kv_ship is True else kv_ship
         router_kwargs["kv_ship"] = replace(scm, c_prefill=cm.c_prefill)
     router = make_router(arm, replicas, topology=topology, seed=seed,
-                         **router_kwargs)
+                         tracer=tracer, **router_kwargs)
 
     events: list[tuple[int, int, str, object]] = []
     seq = 0
@@ -454,6 +488,9 @@ def simulate(
     finished = 0
     ttfts: list[int] = []
     admission_stalls: list[int] = []
+    # attribution totals (always kept — four int adds per dispatch); the
+    # conservation law is sum(phases) == admission_stall_total, exactly
+    phases = {"queue_wait": 0, "dispatch": 0, "ship_wait": 0, "prefill": 0}
     last_t = 0
     while events:
         t, _, kind, payload = heapq.heappop(events)
@@ -493,6 +530,25 @@ def simulate(
             # back would read congestion as collapse and choke the fleet
             ttft = first_tok - session.dispatch_t
             admission_stalls.append(first_tok - session.submit_t)
+            # exact decomposition of this session's admission stall:
+            #   (t - submit) + cost + (ready - start) + prefill
+            # == first_tok - submit  (telescoping: start = t + cost,
+            # first_tok = ready + prefill) — integers, no rounding
+            phases["queue_wait"] += t - session.submit_t
+            phases["dispatch"] += cost
+            phases["ship_wait"] += ready - start
+            phases["prefill"] += prefill
+            if tracer:
+                root = tracer.open_span(session.sid, "session")
+                sid = session.sid
+                tracer.span("phase.queue_wait", sid, session.submit_t, t,
+                            parent=root, cycles=t - session.submit_t)
+                tracer.span("phase.dispatch", sid, t, start,
+                            parent=root, cycles=cost)
+                tracer.span("phase.ship_wait", sid, start, ready,
+                            parent=root, cycles=ready - start)
+                tracer.span("phase.prefill", sid, ready, first_tok,
+                            parent=root, cycles=prefill, uncached=uncached)
             finish_t = first_tok + cm.c_decode * session.decode_len
             push(finish_t, "finish", (session, ttft))
         if busy_until > t and len(router):
@@ -500,6 +556,14 @@ def simulate(
 
     assert finished == len(sessions), f"{finished}/{len(sessions)} finished"
     stats = router.stats
+    if registry is not None:
+        stats.register_into(registry, prefix=f"{arm}_router")
+        m = getattr(router, "metrics", None)
+        if m is not None:
+            m.register_into(registry, prefix=f"{arm}_sched")
+        fabric = getattr(router, "fabric", None)
+        if fabric is not None:
+            fabric.stats.register_into(registry, prefix=f"{arm}_ship")
     stalls = sorted(stats.stalls)
     p99 = stalls[min(len(stalls) - 1, int(0.99 * len(stalls)))] if stalls else 0
     adm = sorted(admission_stalls)
@@ -525,4 +589,5 @@ def simulate(
         shipped_tokens=getattr(stats, "shipped_tokens", 0),
         ship_cycles=getattr(stats, "ship_cycles", 0),
         reprefill_avoided=getattr(stats, "reprefill_avoided", 0),
+        phase_cycles=phases,
     )

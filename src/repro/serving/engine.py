@@ -93,6 +93,7 @@ class DecodeEngine:
         prefix_kv=None,
         batching: bool = False,
         pack_width: int | None = None,
+        tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
     ):
         self.model = model
         self.params = params
@@ -106,6 +107,13 @@ class DecodeEngine:
                 "an explicit scheduler's topology would silently win otherwise"
             )
         self.scheduler = scheduler if scheduler is not None else CNAScheduler(topology=topology)
+        # one tracer for engine + scheduler: an engine-level tracer is shared
+        # down so queue_wait spans land in the same causal tree; with none
+        # anywhere, both hold the falsy NULL_TRACER and every site below is
+        # a single truthiness check (the zero-cost-off contract)
+        if tracer is not None:
+            self.scheduler.tracer = tracer
+        self.tracer = self.scheduler.tracer
         self.eos = eos
         # placement: a repro.placement policy (name or instance) making the
         # slot cache NUMA-homed over the scheduler's topology — each request's
@@ -226,6 +234,11 @@ class DecodeEngine:
                 f"{self.cache_len} (need len(prompt) < cache_len to leave "
                 "room for decode); truncate the prompt or grow the cache"
             )
+        derived = req.domain is None
+        if self.tracer:
+            self.tracer.begin(
+                "request", req.rid, self.scheduler.now, prompt_len=len(req.prompt)
+            )
         if req.domain is None:
             if self.prefix_index is not None:
                 domain, matched = self.prefix_index.home(req.prompt)
@@ -238,6 +251,12 @@ class DecodeEngine:
             # the engine's only defensible default, and it is explicit here
             # rather than coerced deep inside SlotCache.claim
             req.domain = 0 if domain is None else domain
+        if self.tracer:
+            now = self.scheduler.now
+            self.tracer.span(
+                "home_derivation", req.rid, now, now,
+                domain=req.domain, matched=req.matched_len, derived=derived,
+            )
         ctl = self.scheduler.controller
         if ctl is not None and self.slots.telemetry is not None:
             shed = ctl.shed_home(req.domain)
@@ -246,6 +265,11 @@ class DecodeEngine:
                 # the admission there (shed) rather than letting placement
                 # spill it — the matched-prefix discount no longer applies
                 # at the new home, so the charge model stays honest
+                if self.tracer:
+                    now = self.scheduler.now
+                    self.tracer.span(
+                        "shed", req.rid, now, now, home=req.domain, to=shed
+                    )
                 req.domain = shed
                 req.matched_len = 0
                 self.slots.telemetry.record_shed()
@@ -268,6 +292,17 @@ class DecodeEngine:
             migration = migration * uncached // len(req.prompt)
         stall = self.domain_switch_cost * switch_distance + migration
         self.sim_time += stall
+        if self.tracer:
+            now = self.scheduler.now
+            sp = self.tracer.span(
+                "admit", req.rid, now, now, slot=slot, domain=req.domain,
+                switch_distance=switch_distance, stall_cycles=stall,
+            )
+            if self.slots.last_distance:
+                self.tracer.span(
+                    "migrate", req.rid, now, now, parent=sp,
+                    distance=self.slots.last_distance, cycles=migration,
+                )
         if self.prefix_index is not None and self.slots.last_domain is not None:
             # re-home: the prefix now lives wherever placement actually
             # put it, which is where the next match should send traffic
@@ -287,7 +322,18 @@ class DecodeEngine:
             if req is None:
                 break
             slot = self._claim_and_charge(req, self.scheduler.last_admit_distance)
+            p0, r0 = self.prefill_positions, self.reused_positions
             logits, cache = self._prefill_reuse(req.prompt, req.matched_len)
+            if self.tracer:
+                computed = self.prefill_positions - p0
+                reused = self.reused_positions - r0
+                kind = "reuse" if computed == 0 else ("cont" if reused else "fresh")
+                now = self.scheduler.now
+                self.tracer.span(
+                    "prefill", req.rid, now, now,
+                    kind=kind, computed=computed, reused=reused,
+                )
+                self.tracer.begin("decode", req.rid, now)
             self.slots.insert(slot, cache)
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
@@ -355,6 +401,12 @@ class DecodeEngine:
             for i, (req, slot, _hint) in enumerate(fresh):
                 self.slots.insert_row(slot, cache, i)
                 self.prefill_positions += len(req.prompt)
+                if self.tracer:
+                    now = self.scheduler.now
+                    self.tracer.span(
+                        "prefill", req.rid, now, now,
+                        kind="fresh", computed=len(req.prompt), reused=0,
+                    )
                 assign.append((req, slot, nxt[i]))
                 if store is not None:
                     single = self.slots.fit_single(self.batcher.extract_row(cache, i))
@@ -370,10 +422,22 @@ class DecodeEngine:
             for i, (req, slot, matched, _c) in enumerate(cont):
                 self.slots.insert_row(slot, cache, i)
                 self.prefill_positions += len(req.prompt) - matched
+                if self.tracer:
+                    now = self.scheduler.now
+                    self.tracer.span(
+                        "prefill", req.rid, now, now, kind="cont",
+                        computed=len(req.prompt) - matched, reused=matched,
+                    )
                 assign.append((req, slot, nxt[i]))
                 single = self.slots.fit_single(self.batcher.extract_row(cache, i))
                 store.put([int(t) for t in req.prompt], single, logits[i : i + 1])
         for req, slot, logits in ready:
+            if self.tracer:
+                now = self.scheduler.now
+                self.tracer.span(
+                    "prefill", req.rid, now, now,
+                    kind="reuse", computed=0, reused=len(req.prompt),
+                )
             assign.append((req, slot, jnp.argmax(logits[0])))
 
         # ONE host transfer for every admitted request's first token
@@ -383,6 +447,8 @@ class DecodeEngine:
             req.out.append(tok)
             self.tokens = self.tokens.at[slot, 0].set(tok)
             self.active_req[slot] = req
+            if self.tracer:
+                self.tracer.begin("decode", req.rid, self.scheduler.now)
 
     def _prefill_reuse(self, prompt, hint_len: int = 0):
         """Prefill ``prompt``, resuming from the longest stored prefix cache
@@ -499,6 +565,20 @@ class DecodeEngine:
             else (),
         }
 
+    # -- observability ---------------------------------------------------------
+    def register_metrics(self, registry, prefix: str = "engine") -> None:
+        """Register this engine's live counters — and its scheduler's (and,
+        transitively, placement telemetry's) surface — into a
+        ``repro.obs.MetricsRegistry`` as thin views.  Reads through; nothing
+        moves, no call-site changes anywhere."""
+        self.scheduler.metrics.register_into(registry, prefix=f"{prefix}_sched")
+        registry.gauge(f"{prefix}_prefill_positions", fn=lambda: self.prefill_positions)
+        registry.gauge(f"{prefix}_reused_positions", fn=lambda: self.reused_positions)
+        registry.gauge(f"{prefix}_kv_deposits", fn=lambda: self.kv_deposits)
+        registry.gauge(f"{prefix}_sim_time", fn=lambda: self.sim_time)
+        registry.gauge(f"{prefix}_active_slots", fn=lambda: len(self.active_req))
+        registry.gauge(f"{prefix}_queued", fn=lambda: len(self.scheduler))
+
     # -- decode ----------------------------------------------------------------
     def step(self):
         """One engine tick: admit, one fused decode step, retire finished."""
@@ -525,6 +605,7 @@ class DecodeEngine:
             past_len = int(pos_host[slot]) >= self.cache_len - 1
             if req.done or hit_eos or past_len:
                 req.finish_t = self.scheduler.now
+                deposits_before = self.kv_deposits
                 if self.prefix_kv is not None:
                     # retirement-time deposit: the slot's cache now encodes
                     # prompt + out[:-1] (the final token was emitted, never
@@ -550,6 +631,17 @@ class DecodeEngine:
                             np.concatenate([np.asarray(req.prompt), np.asarray(req.out)]),
                             dom,
                         )
+                if self.tracer:
+                    now = self.scheduler.now
+                    self.tracer.end(
+                        self.tracer.open_span(req.rid, "decode"), now,
+                        tokens=len(req.out),
+                    )
+                    root = self.tracer.open_span(req.rid, "request")
+                    if self.kv_deposits > deposits_before:
+                        self.tracer.event(root, "deposit", now)
+                    self.tracer.event(root, "retire", now, slot=slot)
+                    self.tracer.end(root, now)
                 self.slots.release(slot)
                 del self.active_req[slot]
 

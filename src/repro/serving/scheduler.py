@@ -50,6 +50,7 @@ from dataclasses import dataclass, field
 
 from repro.core.policy import CNAAdmissionQueue, FIFOAdmissionQueue
 from repro.core.topology import Topology, get_topology
+from repro.obs import NULL_TRACER, BoundedHistogram, trace_key
 
 
 @dataclass
@@ -59,7 +60,10 @@ class SchedulerMetrics:
     domain_switches: int = 0
     switch_distance: int = 0   # sum of topology distances over switches
     per_domain: dict = field(default_factory=dict)
-    waits: list = field(default_factory=list)
+    # bounded wait-time reservoir: list-compatible (append/len/index/iterate)
+    # but capped, so a long-running serve can't leak one entry per admission;
+    # exact quantiles while under the cap (every bench stays under it)
+    waits: BoundedHistogram = field(default_factory=BoundedHistogram)
     # slot-placement telemetry (repro.placement.PlacementTelemetry) when the
     # engine runs a placement-aware SlotCache; None otherwise
     placement: object = None
@@ -77,14 +81,25 @@ class SchedulerMetrics:
         half = max(1, len(counts) // 2)
         return sum(counts[:half]) / tot
 
+    def register_into(self, registry, prefix: str = "sched") -> None:
+        """Expose this surface through a ``repro.obs.MetricsRegistry`` as
+        thin live views — the dataclass stays the single source of truth."""
+        registry.adopt(prefix, self, props=("locality",))
+        registry.gauge(f"{prefix}_fairness_factor", fn=self.fairness_factor)
+        if self.placement is not None:
+            self.placement.register_into(registry, prefix=f"{prefix}_placement")
+
 
 class _BaseScheduler:
-    def __init__(self, queue, topology: Topology | None = None):
+    def __init__(self, queue, topology: Topology | None = None, tracer=None):
         self._q = queue
         self.topology = get_topology(topology) if topology is not None else None
         self.current_domain = 0
         self.metrics = SchedulerMetrics()
         self._clock = 0
+        # causal span sink (repro.obs.Tracer); NULL_TRACER is falsy, so every
+        # instrumentation site below is one truthiness check when disabled
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         # distance of the most recent admission's switch (0 when local);
         # the engine charges migration cost from this instead of recomputing
         self.last_admit_distance = 0
@@ -142,7 +157,8 @@ class _BaseScheduler:
         self.metrics.admitted += 1
         self.metrics.waits.append(self._clock - t_submit)
         self.metrics.per_domain[domain] = self.metrics.per_domain.get(domain, 0) + 1
-        if domain == self.current_domain:
+        local = domain == self.current_domain
+        if local:
             self.metrics.local_admits += 1
             self.last_admit_distance = 0
         else:
@@ -150,6 +166,15 @@ class _BaseScheduler:
             self.last_admit_distance = self.distance_to(domain)
             self.metrics.switch_distance += self.last_admit_distance
             self.current_domain = domain
+        if self.tracer:
+            g = getattr(self._q, "last_grant", None)
+            sp = self.tracer.span(
+                "queue_wait", trace_key(request), t_submit, self._clock,
+                domain=domain, local=local, distance=self.last_admit_distance,
+                kind=getattr(g, "kind", None),
+            )
+            if g is not None:
+                self.tracer.discipline_events(sp, g.events, self._clock)
         return request
 
     def next_batch(self, k: int) -> list:
@@ -184,6 +209,7 @@ class CNAScheduler(_BaseScheduler):
         topology: Topology | None = None,
         max_active=None,  # int | repro.placement.AdaptiveController | None
         rotate_after: int = 64,
+        tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
     ):
         super().__init__(
             CNAAdmissionQueue(
@@ -194,6 +220,7 @@ class CNAScheduler(_BaseScheduler):
                 rotate_after=rotate_after,
             ),
             topology=topology,
+            tracer=tracer,
         )
 
 
@@ -212,8 +239,10 @@ class FIFOScheduler(_BaseScheduler):
         topology: Topology | None = None,
         max_active=None,  # int | repro.placement.AdaptiveController | None
         rotate_after: int = 64,
+        tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
     ):
         super().__init__(
             FIFOAdmissionQueue(max_active=max_active, rotate_after=rotate_after),
             topology=topology,
+            tracer=tracer,
         )

@@ -301,3 +301,49 @@ def test_hierarchical_sim_charges_cross_pod_premium():
     assert pod_r.ops < flat_r.ops  # cross-pod transfers cost more
     cna_pod = run_sweep(CNASim, [16], topology=pod(2, 2), lock_kwargs={"threshold": 0xFF}, **kw)[0]
     assert cna_pod.ops > pod_r.ops  # locality pays off even more on a fabric
+
+
+# -- tracing is a fourth observer, never a fourth driver ----------------------
+
+
+def drive_scheduler(domains, holder_domain, seed, threshold, shuffle, tracer=None):
+    """CNAScheduler as a grant-order driver (the serving wrapper over
+    CNAAdmissionQueue), optionally observed by a repro.obs.Tracer."""
+    from repro.serving.scheduler import CNAScheduler
+
+    s = CNAScheduler(
+        fairness_threshold=threshold, shuffle_reduction=shuffle, seed=seed,
+        tracer=tracer,
+    )
+    s.current_domain = holder_domain
+    for i, d in enumerate(domains):
+        s.submit(i, d)
+    order = []
+    while len(s):
+        order.append(s.next_request())
+    return order
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULES))
+@pytest.mark.parametrize("threshold,shuffle", [(0xFFFF, False), (0x1, False), (0xF, True)])
+def test_traced_scheduler_keeps_the_grant_order_contract(sched, threshold, shuffle):
+    """The cross-driver contract extended through the tracer: a CNAScheduler
+    with a live Tracer attached admits in exactly the order the bare
+    CNAAdmissionQueue grants (zero-cost-off means zero-effect-on, too), and
+    every grant's queue_wait span carries the discipline events."""
+    from repro.obs import Tracer
+
+    domains = SCHEDULES[sched]
+    holder = domains[0]
+    seed = 7
+    queue_order = drive_queue(domains, holder, seed, threshold, shuffle, 0xFF)
+    untraced = drive_scheduler(domains, holder, seed, threshold, shuffle)
+    tr = Tracer()
+    traced = drive_scheduler(domains, holder, seed, threshold, shuffle, tracer=tr)
+    assert untraced == traced == queue_order
+    spans = [s for s in tr.spans if s.name == "queue_wait"]
+    assert [s.trace for s in spans] == queue_order  # one span per grant, in order
+    assert not tr.check()  # all closed
+    assert all(s.attrs.get("kind") for s in spans)  # every grant labelled
+    if not shuffle:  # the shuffle-reduction fast path grants without events
+        assert any(s.events for s in spans)  # discipline events ride along

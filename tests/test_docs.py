@@ -57,7 +57,8 @@ def _blocks(path, *, jax_only=None):
 def test_docs_exist_and_have_examples():
     paths = _doc_files()
     names = {os.path.basename(p) for p in paths}
-    assert {"architecture.md", "benchmarks.md", "models.md"} <= names
+    assert {"architecture.md", "benchmarks.md", "models.md",
+            "observability.md"} <= names
     arch = os.path.join(DOCS, "architecture.md")
     assert len(_blocks(arch)) >= 5, "the narrative lost its runnable examples"
     zoo = os.path.join(DOCS, "models.md")

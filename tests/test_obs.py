@@ -1,0 +1,322 @@
+"""repro.obs: causal spans, the unified registry, and the conservation law.
+
+Three layers of guarantees:
+
+  * unit — ``BoundedHistogram`` is list-compatible and exact under its cap
+    (and stays bounded, with exact count/sum/min/max, beyond it);
+    ``MetricsRegistry`` renders counters/gauges/views/histograms uniformly;
+    ``Tracer`` nests spans causally under a deterministic clock and
+    round-trips through the JSONL exporter;
+  * property (hypothesis via tests/_hypothesis_compat.py) — on randomized
+    fleet runs every opened span closes, every parent opens no later than its
+    children, and the four ``phase.*`` spans sum *exactly* to that session's
+    submit -> first-token stall (the attribution conservation law), per
+    session and in aggregate;
+  * zero-cost-off — a fleet run with a tracer attached yields a numerically
+    identical ``FleetResult`` to the untraced run (the tracer takes no
+    branch and draws no randomness the bare run doesn't).
+"""
+
+import json
+import random
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.obs import (
+    NULL_TRACER,
+    BoundedHistogram,
+    MetricsRegistry,
+    Tracer,
+    flame,
+    render_prometheus,
+    to_jsonl,
+    trace_key,
+)
+from repro.obs.export import from_jsonl
+from repro.router import ShipCostModel, shared_prefix_sessions, simulate
+
+
+# -- BoundedHistogram ---------------------------------------------------------
+
+
+def _nearest_rank(samples, q):
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(q / 100.0 * len(s)))]
+
+
+def test_histogram_is_list_compatible():
+    h = BoundedHistogram(cap=16)
+    h.extend([5, 1, 3])
+    h.append(2)
+    assert len(h) == 4 and h[0] == 5 and list(h) == [5, 1, 3, 2]
+    assert sorted(h) == [1, 2, 3, 5]
+    assert bool(h) and not bool(BoundedHistogram())
+    import numpy as np
+
+    assert np.array(h).sum() == 11
+
+
+def test_histogram_exact_under_cap():
+    rng = random.Random(3)
+    h = BoundedHistogram(cap=64)
+    vals = [rng.randrange(1000) for _ in range(64)]
+    h.extend(vals)
+    assert h.n == 64 and h.total == sum(vals)
+    for q in (0, 25, 50, 90, 99, 100):
+        assert h.percentile(q) == _nearest_rank(vals, q)
+    s = h.summary()
+    assert s["count"] == 64 and s["min"] == min(vals) and s["max"] == max(vals)
+
+
+def test_histogram_bounded_over_cap():
+    h = BoundedHistogram(cap=8, seed=1)
+    vals = list(range(1000))
+    h.extend(vals)
+    assert len(h) == 8          # retained stays bounded
+    assert h.n == 1000          # true count exact
+    assert h.total == sum(vals) and h.vmin == 0 and h.vmax == 999
+    assert all(v in vals for v in h)
+    assert h.summary()["retained"] == 8
+
+
+def test_histogram_reservoir_is_deterministic_and_private():
+    """Same seed -> same retained set, and filling one histogram never
+    perturbs another (no shared RNG stream)."""
+    a, b = BoundedHistogram(cap=4, seed=9), BoundedHistogram(cap=4, seed=9)
+    for v in range(100):
+        a.append(v)
+        b.append(v)
+    assert list(a) == list(b)
+    state = random.getstate()
+    BoundedHistogram(cap=2, seed=5).extend(range(50))
+    assert random.getstate() == state  # module-level RNG untouched
+
+
+@settings(max_examples=25)
+@given(vals=st.lists(st.integers(min_value=0, max_value=10_000), min_size=1, max_size=200),
+       q=st.integers(min_value=0, max_value=100))
+def test_histogram_quantiles_exact_under_cap_property(vals, q):
+    h = BoundedHistogram(cap=200)
+    h.extend(vals)
+    assert h.percentile(q) == _nearest_rank(vals, q)
+    assert h.n == len(vals) and h.total == sum(vals)
+
+
+# -- MetricsRegistry ----------------------------------------------------------
+
+
+def test_registry_counter_gauge_histogram_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("grants").inc(3)
+    reg.gauge("depth").set(7)
+    reg.histogram("waits", cap=4).extend([1, 2, 3])
+    snap = reg.collect()
+    assert snap["grants"] == 3 and snap["depth"] == 7
+    assert snap["waits"]["count"] == 3 and snap["waits"]["sum"] == 6
+    assert "grants" in reg and reg["depth"].value == 7
+    prom = reg.render_prometheus()
+    assert "# TYPE grants counter" in prom and "grants 3" in prom
+    assert 'waits{quantile="0.5"} 2' in prom and "waits_count 3" in prom
+
+
+def test_registry_adopts_legacy_surface_as_live_views():
+    from repro.serving.scheduler import CNAScheduler
+
+    s = CNAScheduler(fairness_threshold=0xF)
+    for i in range(6):
+        s.submit(i, i % 2)
+    reg = MetricsRegistry()
+    s.metrics.register_into(reg)
+    before = reg.collect()["sched_admitted"]
+    while len(s):
+        s.next_request()
+    snap = reg.collect()
+    assert before == 0 and snap["sched_admitted"] == 6  # view, not copy
+    assert snap["sched_waits"]["count"] == 6
+    assert 0.0 <= snap["sched_locality"] <= 1.0
+    assert isinstance(snap["sched_per_domain"], dict)
+    prom = reg.render_prometheus()
+    assert 'sched_per_domain{key="0"}' in prom
+    assert "sched_fairness_factor" in prom
+
+
+def test_registry_sanitizes_metric_names():
+    reg = MetricsRegistry()
+    reg.counter("weird name/with:chars").inc()
+    assert "weird_name_with:chars 1" in reg.render_prometheus()
+
+
+# -- Tracer -------------------------------------------------------------------
+
+
+def test_trace_key_prefers_rid_then_sid():
+    class R:
+        rid = 4
+
+    class S:
+        sid = "s9"
+
+    assert trace_key(R()) == 4 and trace_key(S()) == "s9"
+    assert trace_key(11) == 11 and trace_key("r3") == "r3"
+    assert trace_key(3.5) == "3.5"  # non-id payloads stringify
+
+
+def test_tracer_auto_parents_within_a_trace():
+    tr = Tracer()
+    root = tr.begin("session", 1, 0)
+    child = tr.begin("request", 1, 2)
+    other = tr.begin("session", 2, 1)  # different trace: no parent
+    leaf = tr.span("queue_wait", 1, 2, 5)
+    assert child.parent_id == root.span_id
+    assert leaf.parent_id == child.span_id
+    assert other.parent_id is None
+    tr.end(child, 7)
+    tr.end(root, 9)
+    late = tr.span("attribution", 1, 0, 9)
+    assert late.parent_id is None  # everything closed: no implicit parent
+    assert [s.name for s in tr.for_trace(1)] == [
+        "session", "request", "queue_wait", "attribution"
+    ]
+    assert tr.check() == [other]  # trace 2 still open
+
+
+def test_tracer_end_clamps_and_events_attach():
+    tr = Tracer()
+    sp = tr.begin("decode", "r", 10)
+    tr.event(sp, "token", 11, pos=0)
+    tr.end(sp, 4)  # clock went backwards: clamp to start, never negative
+    assert sp.end == 10 and sp.duration == 0
+    assert sp.events == [("token", 11, {"pos": 0})]
+    tr.end(sp, 99)  # double-end is a no-op
+    assert sp.end == 10
+
+
+def test_tracer_phase_cycles_sums_phase_spans():
+    tr = Tracer()
+    tr.span("phase.queue_wait", "s", 0, 4, cycles=4)
+    tr.span("phase.prefill", "s", 4, 10, cycles=6)
+    tr.span("phase.prefill", "s", 10, 11, cycles=1)
+    tr.span("decode", "s", 11, 20)  # not a phase span
+    assert tr.phase_cycles("s") == {"queue_wait": 4, "prefill": 7}
+
+
+def test_null_tracer_is_falsy_and_inert():
+    assert not NULL_TRACER and len(NULL_TRACER) == 0
+    assert NULL_TRACER.begin("x", 1, 0) is None
+    assert NULL_TRACER.span("x", 1, 0, 1) is None
+    NULL_TRACER.end(None, 5)
+    assert NULL_TRACER.check() == [] and NULL_TRACER.phase_cycles(1) == {}
+    assert list(NULL_TRACER) == []
+
+
+def test_jsonl_roundtrip_and_flame(tmp_path):
+    tr = Tracer()
+    root = tr.begin("session", 7, 0)
+    tr.span("queue_wait", 7, 0, 3, kind="scan")
+    tr.end(root, 10)
+    path = tmp_path / "trace.jsonl"
+    assert to_jsonl(tr, str(path)) == 2
+    rows = from_jsonl(str(path))
+    assert [r["name"] for r in rows] == ["session", "queue_wait"]
+    assert rows[1]["parent_id"] == rows[0]["span_id"]
+    assert json.loads(path.read_text().splitlines()[0])["trace"] == 7
+    art = flame(tr, 7)
+    assert "session" in art and "queue_wait" in art and "[scan]" in art
+
+
+# -- fleet properties: well-formedness + the conservation law -----------------
+
+
+def _run(arm, n_sessions, skew_seed, *, ship, tracer=None, registry=None):
+    rng = random.Random(skew_seed)
+    draws = [rng.randrange(10) for _ in range(n_sessions)]
+    sessions = shared_prefix_sessions(draws, 64, 12, 16)
+    return simulate(
+        arm, sessions, n_replicas=3, inter_arrival=9, seed=skew_seed,
+        kv_ship=ShipCostModel() if ship else None,
+        tracer=tracer, registry=registry,
+    )
+
+
+@settings(max_examples=8)
+@given(arm=st.sampled_from(["federated", "round_robin", "least_loaded"]),
+       n_sessions=st.integers(min_value=5, max_value=60),
+       skew_seed=st.integers(min_value=0, max_value=2**16))
+def test_fleet_spans_well_formed_and_conservative(arm, n_sessions, skew_seed):
+    tr = Tracer()
+    r = _run(arm, n_sessions, skew_seed, ship=arm == "federated", tracer=tr)
+    assert not tr.check()  # every opened span closed
+    by_id = {s.span_id: s for s in tr.spans}
+    for s in tr.spans:
+        assert s.end >= s.start
+        if s.parent_id is not None:
+            p = by_id[s.parent_id]
+            assert p.trace == s.trace
+            assert p.start <= s.start  # parents open before children
+    # conservation: per session and in aggregate, phases sum exactly to the
+    # admission stall (submit -> first token)
+    total = 0
+    for trace in tr.traces():
+        spans = {s.name: s for s in tr.for_trace(trace)}
+        phases = tr.phase_cycles(trace)
+        assert set(phases) == {"queue_wait", "dispatch", "ship_wait", "prefill"}
+        stall = spans["phase.prefill"].end - spans["session"].start
+        assert sum(phases.values()) == stall
+        total += stall
+    assert total == r.admission_stall_total
+    assert sum(r.phase_cycles.values()) == r.admission_stall_total
+    assert len(tr.traces()) == n_sessions == r.n_sessions
+
+
+@pytest.mark.parametrize("arm", ["federated", "round_robin", "least_loaded"])
+def test_tracer_off_vs_on_fleet_results_identical(arm):
+    from dataclasses import asdict
+
+    off = _run(arm, 40, 5, ship=arm == "federated")
+    reg = MetricsRegistry()
+    on = _run(arm, 40, 5, ship=arm == "federated", tracer=Tracer(), registry=reg)
+    assert asdict(off) == asdict(on)
+    # and the registry's adopted views agree with the result the run reported
+    snap = reg.collect()
+    assert snap[f"{arm}_router_sheds"] == on.sheds
+    if arm == "federated":  # only the CNA-disciplined arm has a scheduler
+        assert snap[f"{arm}_sched_waits"]["count"] >= 0
+
+
+def test_fleet_registry_histograms_stay_bounded():
+    reg = MetricsRegistry()
+    _run("federated", 30, 2, ship=True, registry=reg)
+    stalls = reg[f"federated_router_stalls"]
+    assert isinstance(stalls, BoundedHistogram)
+    assert len(stalls) <= stalls.cap and stalls.n == 30
+    prom = render_prometheus(reg)
+    assert "federated_router_stalls_count 30" in prom
+
+
+# -- the bounded stat surfaces (satellite: waits/stalls no longer unbounded) --
+
+
+def test_scheduler_waits_is_bounded_histogram():
+    from repro.serving.scheduler import FIFOScheduler
+
+    s = FIFOScheduler()
+    s.metrics.waits = BoundedHistogram(cap=8)  # tiny cap to exercise bound
+    for i in range(100):
+        s.submit(i, 0)
+    while len(s):
+        s.next_request()
+        s.tick()
+    assert s.metrics.admitted == 100
+    assert s.metrics.waits.n == 100 and len(s.metrics.waits) <= 8
+    assert isinstance(FIFOScheduler().metrics.waits, BoundedHistogram)
+
+
+def test_router_stats_stalls_is_bounded_histogram():
+    from repro.router import RouterStats
+
+    assert isinstance(RouterStats().stalls, BoundedHistogram)

@@ -229,6 +229,26 @@ def test_telemetry_counters_and_locality():
     assert tel.per_domain_occupancy[0] == 0 and tel.peak_occupancy[0] == 1
 
 
+def test_telemetry_release_never_drives_occupancy_negative():
+    """Regression: an unmatched release (double release, or one routed to a
+    domain with no live placement) used to push ``per_domain_occupancy``
+    negative — biasing every derived-home tie-break toward a domain that was
+    never occupied.  It now counts as ``unmatched_releases`` and leaves the
+    occupancy map untouched."""
+    tel = PlacementTelemetry(n_domains=2)
+    tel.record_release(0)  # nothing ever placed in domain 0
+    assert tel.per_domain_occupancy.get(0, 0) == 0
+    assert tel.releases == 1 and tel.unmatched_releases == 1
+
+    fl = DomainFreeLists(2, pod(1, 2))
+    tel.record_placement(get_policy("nearest_spill").place(fl, 1, TWO_SOCKET))
+    tel.record_release(1)
+    tel.record_release(1)  # double release of the same claim
+    assert tel.per_domain_occupancy[1] == 0
+    assert tel.unmatched_releases == 2
+    assert min(tel.per_domain_occupancy.values()) >= 0
+
+
 # -- adaptive controller ------------------------------------------------------
 
 
