@@ -1,0 +1,130 @@
+"""Schema validation for the ``BENCH_<section>.json`` record set.
+
+    PYTHONPATH=src python -m benchmarks.check_bench [--dir D] \
+        [--require section ...] [paths ...]
+
+Every ``benchmarks/run.py`` section writes one record through
+``benchmarks.common.bench_section`` — this checker pins that contract from
+the consumer side, so a section that drifts (renamed key, stringly-typed
+claim, missing pass/fail) fails CI instead of silently producing records the
+trajectory tooling cannot read.  The schema is the *shared* one: the
+required keys and claim shape here must match what ``bench_section`` emits,
+and ``schema`` must equal ``benchmarks.common.BENCH_SCHEMA`` exactly —
+bumping the writer without bumping the checker (or vice versa) is the error
+this catches first.
+
+``--require`` additionally asserts that specific sections produced a record
+at all (a lane that stops *running* a bench emits nothing — absence is the
+failure mode validation alone cannot see).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from .common import BENCH_SCHEMA
+
+# the record contract bench_section writes: key -> required type
+_RECORD_KEYS = {
+    "bench": str,
+    "schema": int,
+    "smoke": bool,
+    "claims": list,
+    "metrics": dict,
+    "passed": bool,
+}
+_CLAIM_KEYS = {"name": str, "ok": bool, "detail": str}
+
+
+def check_record(path: str) -> list[str]:
+    """Validate one record file; returns a list of violations (empty = ok)."""
+    errs: list[str] = []
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable record: {e}"]
+    if not isinstance(rec, dict):
+        return [f"{path}: record is {type(rec).__name__}, expected object"]
+    for key, typ in _RECORD_KEYS.items():
+        if key not in rec:
+            errs.append(f"{path}: missing key {key!r}")
+        elif not isinstance(rec[key], typ):
+            errs.append(
+                f"{path}: {key!r} is {type(rec[key]).__name__}, "
+                f"expected {typ.__name__}"
+            )
+    if errs:
+        return errs
+    if rec["schema"] != BENCH_SCHEMA:
+        errs.append(
+            f"{path}: schema {rec['schema']} != writer schema {BENCH_SCHEMA} "
+            "(stale record, or checker/writer bumped out of lockstep)"
+        )
+    expect = f"BENCH_{rec['bench']}.json"
+    if os.path.basename(path) != expect:
+        errs.append(f"{path}: bench {rec['bench']!r} belongs in {expect}")
+    for i, c in enumerate(rec["claims"]):
+        if not isinstance(c, dict):
+            errs.append(f"{path}: claims[{i}] is not an object")
+            continue
+        for key, typ in _CLAIM_KEYS.items():
+            if key not in c:
+                errs.append(f"{path}: claims[{i}] missing {key!r}")
+            elif not isinstance(c[key], typ):
+                errs.append(
+                    f"{path}: claims[{i}].{key} is "
+                    f"{type(c[key]).__name__}, expected {typ.__name__}"
+                )
+    if all(isinstance(c, dict) and "ok" in c for c in rec["claims"]):
+        derived = all(c["ok"] for c in rec["claims"])
+        if rec["passed"] != derived:
+            errs.append(
+                f"{path}: passed={rec['passed']} but claims say {derived}"
+            )
+    for k in rec["metrics"]:
+        if not isinstance(k, str):
+            errs.append(f"{path}: non-string metric key {k!r}")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("paths", nargs="*",
+                    help="record files to check (default: --dir glob)")
+    ap.add_argument("--dir", default=".",
+                    help="directory to glob BENCH_*.json from when no "
+                         "explicit paths are given")
+    ap.add_argument("--require", nargs="*", default=[], metavar="SECTION",
+                    help="section names that must have produced a record")
+    args = ap.parse_args(argv)
+
+    paths = args.paths or sorted(glob.glob(os.path.join(args.dir, "BENCH_*.json")))
+    errs: list[str] = []
+    seen: set[str] = set()
+    for path in paths:
+        file_errs = check_record(path)
+        errs.extend(file_errs)
+        if not file_errs:
+            with open(path) as f:
+                seen.add(json.load(f)["bench"])
+        status = "ok" if not file_errs else "INVALID"
+        print(f"[check_bench] {path}: {status}")
+    for section in args.require:
+        if section not in seen:
+            errs.append(f"required section {section!r} produced no valid record")
+    if errs:
+        print(f"{len(errs)} schema violation(s):")
+        for e in errs:
+            print(f"  - {e}")
+        return 1
+    print(f"[check_bench] {len(paths)} record(s) valid "
+          f"({len(seen)} section(s): {', '.join(sorted(seen))})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

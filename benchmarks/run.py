@@ -4,7 +4,8 @@ benches (serving scheduler, slot placement, collective schedules, roofline).
     PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
 Sections: paper, locks, restriction, placement, serving, serving_prefix,
-serving_continuous, router, obs, collectives, moe_ep, roofline.  Default: all.
+serving_continuous, serving_paging, router, obs, collectives, moe_ep,
+roofline.  Default: all.
 ``serving_prefix`` is the jax-free shared-prefix slice of the serving section
 (prefix-index build/lookup/re-home) so the dependency-light smoke lane can
 cover it; ``serving`` already includes it.  ``router`` (fleet routing on the
@@ -112,6 +113,13 @@ def main() -> int:
 
             with common.bench_section("serving"):
                 serving_bench.continuous(json_path="BENCH_serving.json")
+    if "serving" in sections or "serving_paging" in sections:
+        # always its own record (jax-free): the paged-KV headline must stay
+        # comparable across PRs even when only the smoke lane runs
+        from . import serving_bench
+
+        with common.bench_section("serving_paging"):
+            serving_bench.paging()
     if "router" in sections:
         from . import router_bench
 

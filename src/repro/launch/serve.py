@@ -95,6 +95,13 @@ def main(argv=None) -> int:
     ap.add_argument("--no-batching", action="store_true",
                     help="with --arrivals: use the per-request prefill engine "
                          "instead of the bucketed/packed batched one")
+    ap.add_argument("--paged", action="store_true",
+                    help="back the engine's KV with the refcounted page "
+                         "table (copy-on-write prefix sharing); dense-"
+                         "attention stacks only")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page with --paged (must divide "
+                         "--cache-len)")
     ap.add_argument("--trace", metavar="OUT.jsonl", default=None,
                     help="record causal request spans (repro.obs.Tracer), "
                          "dump them as JSONL to OUT.jsonl and print one "
@@ -140,10 +147,11 @@ def main(argv=None) -> int:
     from repro.core.topology import pod
 
     def engine_kwargs(mk_sched):
+        kw = dict(paging=args.paged, page_size=args.page_size) if args.paged else {}
         if not args.derived_homes:
-            return dict(scheduler=mk_sched())
+            return dict(scheduler=mk_sched(), **kw)
         return dict(scheduler=mk_sched(topology=pod(1, args.domains)),
-                    placement="nearest_spill", prefix_index=True)
+                    placement="nearest_spill", prefix_index=True, **kw)
 
     policies = {"cna": lambda **kw: CNAScheduler(fairness_threshold=args.fairness_threshold, **kw),
                 "fifo": lambda **kw: FIFOScheduler(**kw)}
@@ -185,6 +193,13 @@ def main(argv=None) -> int:
               f"locality={m.locality:.2f} switches={m.domain_switches} "
               f"fairness={m.fairness_factor():.3f} wall={wall:.1f}s "
               f"tok_per_simtick={tokens / max(1, eng.sim_time):.2f}{extra}")
+        if args.paged:
+            # the page-table gauges, one line — the same numbers --metrics
+            # exports as {name}_engine_pages_* through the registry
+            pt = eng.slots.table
+            print(f"  [pages] total={pt.pages_total} shared={pt.pages_shared} "
+                  f"free={pt.pages_free} kv_bytes_held={pt.kv_bytes_held} "
+                  f"cow_copies={pt.cow_copies}")
         if registry is not None:
             eng.register_metrics(registry, prefix=f"{name}_engine")
         if tracer is not None:
@@ -284,6 +299,7 @@ def serve_fleet(args) -> int:
             scheduler=CNAScheduler(fairness_threshold=args.fairness_threshold,
                                    topology=pod(1, args.domains)),
             placement="nearest_spill", prefix_index=True, prefix_kv=True,
+            paging=args.paged, page_size=args.page_size,
             domain_switch_cost=args.switch_cost, tracer=tracer,
         ))
         for r in range(args.replicas)

@@ -54,13 +54,21 @@ class ShipCostModel:
     prompt token recomputed — keep it equal to the serving cost model's
     prefill charge so the argmin prices the machine that actually runs.
     ``min_ship_tokens`` floors how small a prefix is worth a transfer
-    (tiny prefixes re-prefill faster than any setup)."""
+    (tiny prefixes re-prefill faster than any setup).
+
+    ``page_size`` switches pricing to page granularity (0 = the PR 5
+    whole-bundle behavior, byte-for-byte): with pages, only the pages the
+    target does **not** already hold cross the fabric — the target's
+    ``local_matched`` run covers its first ``local_matched // page_size``
+    pages, so a ship starts at that boundary instead of token 0, and
+    ``plan_ship`` can source disjoint page ranges from different holders."""
 
     kv_bytes_per_token: int = 64
     fabric_bytes_per_cycle: int = 64
     c_ship_setup: int = 8
     c_prefill: int = 4
     min_ship_tokens: int = 4
+    page_size: int = 0
 
     def xfer_cycles(self, tokens: int, distance: int) -> int:
         """Fabric ticks to move ``tokens`` tokens of KV over ``distance``
@@ -102,6 +110,17 @@ class ShipDecision:
     choice: str = "reprefill"      # "ship" | "reprefill"
     executed: bool = False
     fabric_end: int = -1
+    # tokens that would actually cross the fabric: src_matched minus the
+    # target-held pages under page pricing; -1 (legacy decisions built
+    # before this field) reads as src_matched
+    ship_tokens: int = -1
+    # disjoint per-source page ranges when plan_ship built this decision
+    # (empty for single-source decide()); each covers [start_tok, end_tok)
+    segments: tuple = ()
+
+    @property
+    def tokens_to_move(self) -> int:
+        return self.src_matched if self.ship_tokens < 0 else self.ship_tokens
 
     @property
     def ship_total(self) -> int:
@@ -140,7 +159,11 @@ def decide(
         raise ValueError("need 0 <= local_matched <= prompt_len")
     if not 0 <= src_matched <= prompt_len:
         raise ValueError("need 0 <= src_matched <= prompt_len")
-    ship_cycles = cm.xfer_cycles(src_matched, distance)
+    # page pricing: the target already holds its local_matched run, which
+    # covers full pages up to the aligned boundary — only pages past it
+    # cross the fabric.  page_size=0 keeps the PR 5 whole-bundle charge.
+    held = (local_matched // cm.page_size) * cm.page_size if cm.page_size else 0
+    ship_tokens = max(0, src_matched - min(held, src_matched))
     d = ShipDecision(
         src=src,
         dst=dst,
@@ -149,13 +172,114 @@ def decide(
         local_matched=local_matched,
         src_matched=src_matched,
         wait_cycles=max(0, int(backlog)),
-        ship_cycles=ship_cycles,
+        ship_cycles=cm.xfer_cycles(ship_tokens, distance),
         suffix_cycles=cm.c_prefill * (prompt_len - src_matched),
         reprefill_cycles=cm.c_prefill * (prompt_len - local_matched),
+        ship_tokens=ship_tokens,
     )
     if (
         src_matched > local_matched
-        and src_matched >= cm.min_ship_tokens
+        and ship_tokens >= cm.min_ship_tokens
+        and d.ship_total < d.reprefill_cycles
+    ):
+        d.choice = "ship"
+    return d
+
+
+@dataclass(frozen=True)
+class ShipSegment:
+    """One source's contribution to a planned ship: the page-aligned token
+    range ``[start_tok, end_tok)`` it moves, and the fabric ticks that costs
+    (setup included — fragmentation across sources is priced, not free)."""
+
+    src: int
+    start_tok: int
+    end_tok: int
+    cycles: int
+
+    @property
+    def tokens(self) -> int:
+        return self.end_tok - self.start_tok
+
+
+def plan_ship(
+    *,
+    prompt_len: int,
+    local_matched: int,
+    holders: dict,
+    dst: int,
+    distance_of,
+    backlog: int = 0,
+    cm: ShipCostModel | None = None,
+) -> ShipDecision:
+    """Multi-source page-granular ship plan: cover the pages the target does
+    not hold from whichever holders have them, nearest first, and price the
+    whole plan against re-prefill.
+
+    ``holders`` maps source replica id -> matched tokens there;
+    ``distance_of(src)`` prices each hop.  Per needed page the nearest
+    holder covering it wins (ties to the lower id), adjacent same-source
+    pages merge into one ``ShipSegment`` — so a nearby holder with a short
+    prefix ships its pages and a farther one ships only the rest, which is
+    what subsumes multi-source ship: different holders move *disjoint* page
+    ranges.  The returned decision's ``segments`` carry the plan; ``choice``
+    is still the argmin against re-prefilling from ``local_matched``."""
+    cm = cm or ShipCostModel()
+    ps = cm.page_size
+    if ps <= 0:
+        raise ValueError("plan_ship needs cm.page_size > 0 (page pricing)")
+    holders = {s: m for s, m in holders.items() if s != dst and m > 0}
+    for s, m in holders.items():
+        if not 0 <= m <= prompt_len:
+            raise ValueError(f"holder {s} matched {m} outside [0, {prompt_len}]")
+    best_end = max(holders.values(), default=0)
+    # nominal source: the longest holder (nearest, then lowest id, on ties)
+    # — recorded on the decision even when re-prefill wins, for audit
+    src = min(
+        (s for s, m in holders.items() if m == best_end),
+        key=lambda s: (distance_of(s), s),
+        default=dst,
+    )
+    start = (local_matched // ps) * ps
+    segments: list[ShipSegment] = []
+    if best_end > start:
+        # nearest holder covering each needed page; merge adjacent pages
+        # from the same source into one transfer segment
+        owner: list[int] = []
+        for pg in range(start // ps, -(-best_end // ps)):
+            page_end = min((pg + 1) * ps, best_end)
+            covering = [s for s, m in holders.items() if m >= page_end]
+            owner.append(min(covering, key=lambda s: (distance_of(s), s)))
+        runs: list[tuple[int, int, int]] = []  # (src, start_tok, end_tok)
+        for j, who in enumerate(owner):
+            tok0 = start + j * ps
+            tok1 = min(tok0 + ps, best_end)
+            if runs and runs[-1][0] == who and runs[-1][2] == tok0:
+                runs[-1] = (who, runs[-1][1], tok1)
+            else:
+                runs.append((who, tok0, tok1))
+        segments = [
+            ShipSegment(s, t0, t1, cm.xfer_cycles(t1 - t0, distance_of(s)))
+            for s, t0, t1 in runs
+        ]
+    ship_tokens = sum(s.tokens for s in segments)
+    d = ShipDecision(
+        src=src,
+        dst=dst,
+        distance=distance_of(src) if holders else 0,
+        prompt_len=prompt_len,
+        local_matched=local_matched,
+        src_matched=best_end,
+        wait_cycles=max(0, int(backlog)),
+        ship_cycles=sum(s.cycles for s in segments),
+        suffix_cycles=cm.c_prefill * (prompt_len - best_end),
+        reprefill_cycles=cm.c_prefill * (prompt_len - local_matched),
+        ship_tokens=ship_tokens,
+        segments=tuple(segments),
+    )
+    if (
+        best_end > local_matched
+        and ship_tokens >= cm.min_ship_tokens
         and d.ship_total < d.reprefill_cycles
     ):
         d.choice = "ship"
@@ -222,6 +346,26 @@ class Fabric:
             self.stats.declined += 1
         return d
 
+    def price_plan(
+        self, *, prompt_len: int, local_matched: int, holders: dict,
+        dst: int, now: int,
+    ) -> ShipDecision:
+        """Page-granular multi-source plan at router time ``now`` — the
+        ``plan_ship`` analogue of ``price`` (needs ``cm.page_size > 0``)."""
+        d = plan_ship(
+            prompt_len=prompt_len,
+            local_matched=local_matched,
+            holders=holders,
+            dst=dst,
+            distance_of=lambda s: self.topology.distance(s, dst),
+            backlog=self.backlog(now),
+            cm=self.cm,
+        )
+        self.stats.priced += 1
+        if d.choice != "ship":
+            self.stats.declined += 1
+        return d
+
     def projected_end(self, now: int, d: ShipDecision) -> int:
         """The tick ``d``'s transfer would complete if reserved at ``now``
         — what ``reserve`` will return, computable before committing (so
@@ -239,7 +383,9 @@ class Fabric:
         d.fabric_end = self.busy_until
         s = self.stats
         s.ships += 1
-        s.shipped_tokens += d.src_matched
+        # under page pricing only the un-held pages cross the pipe; legacy
+        # (page_size=0) decisions carry ship_tokens == src_matched
+        s.shipped_tokens += d.tokens_to_move
         s.ship_cycles += d.ship_cycles
         s.wait_cycles += start - now
         return d.fabric_end

@@ -103,6 +103,19 @@ class RouterStats:
     shipped_tokens: int = 0
     ship_cycles: int = 0
     reprefill_avoided: int = 0
+    # page-granular shipping (ShipCostModel.page_size > 0): per-source page
+    # ranges moved by planned ships; a single-source ship counts 1 segment
+    ship_segments: int = 0
+    # speculative pre-dispatch transfers (``prefetch=``): hottest shippable
+    # prefix of a near-capacity replica moved to its likely shed target ahead
+    # of any dispatch — charged to the fabric pipe, never to a session
+    prefetch_ships: int = 0
+    prefetch_tokens: int = 0
+    # fleet victim caching (``victim_cache=``): last-fleet-copy prefixes a
+    # replica evicted, re-homed to a sibling over the fabric instead of
+    # silently dropping the only copy
+    victim_ships: int = 0
+    victim_tokens: int = 0
 
     @property
     def hit_rate(self) -> float:
@@ -146,6 +159,9 @@ class ReplicaRouter:
         max_age: int | None = None,
         controller: FleetController | None = None,
         kv_ship: "bool | ShipCostModel | None" = None,
+        prefetch: bool = False,
+        prefetch_margin: int = 1,
+        victim_cache: bool = False,
         tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
     ) -> None:
         self.replicas = list(replicas)
@@ -194,6 +210,31 @@ class ReplicaRouter:
         if kv_ship is True:
             kv_ship = ShipCostModel()
         self.fabric = Fabric(topo, kv_ship) if kv_ship else None
+        # prefetch ships: when a replica's occupancy is within
+        # ``prefetch_margin`` admissions of its cap at sync time, its hottest
+        # advertised prefix is speculatively shipped to the replica a shed
+        # would pick — so when the shed actually happens, the prefix is
+        # already resident.  Fabric-charged (reserve), session-free.
+        self.prefetch = bool(prefetch)
+        self.prefetch_margin = int(prefetch_margin)
+        self._prefetched: set = set()
+        # fleet victim caching: replicas that expose ``set_victim_hook``
+        # report evicted prefix runs here; sync() re-homes the ones no other
+        # replica still holds (last fleet copy) when the price is right.
+        self.victim_cache = bool(victim_cache)
+        if (self.prefetch or self.victim_cache) and self.fabric is None:
+            raise ValueError(
+                "prefetch/victim_cache move KV over the fabric — enable "
+                "kv_ship (a ShipCostModel or True) to use them"
+            )
+        from collections import deque
+
+        self._victims: "deque[tuple[int, tuple]]" = deque(maxlen=32)
+        if self.victim_cache:
+            for rid, rep in enumerate(self.replicas):
+                hook = getattr(rep, "set_victim_hook", None)
+                if hook is not None:
+                    hook(lambda tokens, r=rid: self._victims.append((r, tuple(tokens))))
 
     # -- clock -----------------------------------------------------------------
     @property
@@ -220,10 +261,17 @@ class ReplicaRouter:
 
     # -- summaries -------------------------------------------------------------
     def sync(self) -> None:
-        """Pull a fresh summary from every replica into the federation."""
+        """Pull a fresh summary from every replica into the federation; with
+        a fabric attached this is also where the two speculative movers run
+        (victims first — a re-homed victim is then visible to prefetch)."""
         for rid, rep in enumerate(self.replicas):
             self.federation.apply(rep.summary(self.top_k, self.now))
         self.stats.syncs += 1
+        if self.fabric is not None:
+            if self.victim_cache:
+                self._drain_victims()
+            if self.prefetch:
+                self._prefetch()
 
     # -- admission -------------------------------------------------------------
     def submit(self, session: Session) -> int:
@@ -334,6 +382,10 @@ class ReplicaRouter:
             return None
         prompt = session.prompt
         local = self.replicas[target].peek_match(prompt, self.now)
+        if self.fabric.cm.page_size > 0:
+            # page pricing on: plan disjoint page ranges over every live
+            # holder instead of picking one source
+            return self._ship_paged(session, target, prompt, local)
         # source selection: longest advertised holding first, then *nearest
         # to the target* — distance multiplies the priced bytes, so between
         # equal holders the far one can flip the argmin to re-prefill and
@@ -395,10 +447,183 @@ class ReplicaRouter:
         # broke the has_capacity contract — the dispatch is already lost.
         s = self.stats
         s.ships += 1
+        s.ship_segments += 1
         s.shipped_tokens += len(tokens)
         s.ship_cycles += d.ship_cycles
         s.reprefill_avoided += len(tokens) - local
         return d
+
+    def _ship_paged(self, session: Session, target: int, prompt, local: int) -> "ShipDecision | None":
+        """Page-granular multi-source ship (``ShipCostModel.page_size > 0``):
+        every live holder contributes the page ranges it is nearest for
+        (``kvship.plan_ship``), the whole plan is priced against re-prefill,
+        and on a win each ``ShipSegment`` is executed in token order with its
+        own delivery embargo (cumulative — the fabric is one serialized pipe,
+        so segment *i* lands only after everything before it).
+
+        An export hands over the source's full reference bundle — references
+        are free; the *price* and the booked ``shipped_tokens`` only charge
+        the pages the target does not hold, which is the page table's
+        accounting (a re-imported held page costs zero bytes)."""
+        advertised = [
+            r
+            for r, m in self.federation.holders(prompt, now=self.now).items()
+            if r != target and m > local
+        ]
+        if not advertised:
+            return None
+        # live-confirm every candidate: stale advertisements must not place
+        # pages on a source that can no longer export them
+        holders = {}
+        for r in advertised:
+            m = self.replicas[r].peek_match(prompt, self.now)
+            if m > local:
+                holders[r] = m
+        if not holders:
+            return None
+        d = self.fabric.price_plan(
+            prompt_len=len(prompt),
+            local_matched=local,
+            holders=holders,
+            dst=target,
+            now=self.now,
+        )
+        if d.choice != "ship":
+            self.stats.ship_declined += 1
+            self._trace_ship(session, d)
+            return d
+        # export every segment's source before importing anything: a single
+        # churned store fails the whole plan cleanly (no partial landing, no
+        # fabric reservation) and the dispatch re-prefills
+        exports = []
+        for seg in d.segments:
+            ex = self.replicas[seg.src].export_kv(prompt)
+            if ex is None or len(ex[0]) < seg.end_tok:
+                self.stats.ship_failed += 1
+                self._trace_ship(session, d, failed=True)
+                return d
+            exports.append(ex)
+        ready = max(self.now, self.fabric.busy_until)
+        for seg, (tokens, payload) in zip(d.segments, exports):
+            ready += seg.cycles  # serialized pipe: embargoes accumulate
+            if not self.replicas[target].import_kv(tokens, payload, ready_t=ready):
+                self.stats.ship_failed += 1
+                self._trace_ship(session, d, failed=True)
+                return d
+        # ready now equals projected_end(now, d): sum(seg.cycles) is
+        # d.ship_cycles, so the last embargo and the reservation agree
+        self.fabric.reserve(self.now, d)
+        d.executed = True
+        self._trace_ship(session, d)
+        s = self.stats
+        s.ships += 1
+        s.ship_segments += len(d.segments)
+        s.shipped_tokens += d.tokens_to_move
+        s.ship_cycles += d.ship_cycles
+        s.reprefill_avoided += d.src_matched - local
+        return d
+
+    def _prefetch(self) -> None:
+        """Speculative pre-dispatch shipping: for each replica within
+        ``prefetch_margin`` admissions of its effective cap, move its hottest
+        advertised prefix to the replica a shed from it would pick — priced
+        like any ship (a congested fabric or a cold prefix declines), booked
+        on the fabric, and deduped so one hot prefix is not re-shipped every
+        sync.  At most one transfer per hot replica per sync keeps the
+        speculation from starving real (dispatch-time) ships of the pipe."""
+        cm = self.fabric.cm
+        n = len(self.replicas)
+        for r, rep in enumerate(self.replicas):
+            cap = min(rep.capacity, self.fleet.cap(r))
+            if cap <= 0 or rep.occupancy + self.prefetch_margin < cap:
+                continue
+            targets = [t for t in range(n) if t != r and self._has_headroom(t)]
+            if not targets:
+                continue
+            # same key a shed uses: nearest, then least in flight
+            target = min(
+                targets,
+                key=lambda t: (self.topology.distance(r, t), self.fleet.inflight[t], t),
+            )
+            for tokens, _stamp in rep.summary(1, self.now).prefixes:
+                tokens = tuple(tokens)
+                key = (r, target, tokens)
+                if key in self._prefetched or len(tokens) < cm.min_ship_tokens:
+                    continue
+                local = self.replicas[target].peek_match(tokens, self.now)
+                actual = rep.peek_match(tokens, self.now)
+                if actual <= local:
+                    continue
+                d = self.fabric.price(
+                    prompt_len=len(tokens), local_matched=local,
+                    src_matched=actual, src=r, dst=target, now=self.now,
+                )
+                if d.choice != "ship":
+                    continue
+                exported = rep.export_kv(tokens)
+                if exported is None:
+                    continue
+                etok, payload = exported
+                if not self.replicas[target].import_kv(
+                    etok, payload, ready_t=self.fabric.projected_end(self.now, d)
+                ):
+                    continue
+                self.fabric.reserve(self.now, d)
+                d.executed = True
+                self._prefetched.add(key)
+                if len(self._prefetched) > 1024:  # bounded dedupe memory
+                    self._prefetched.clear()
+                self.stats.prefetch_ships += 1
+                self.stats.prefetch_tokens += d.tokens_to_move
+                break
+
+    def _drain_victims(self) -> None:
+        """Re-home evicted prefix runs that were the fleet's last copy.
+
+        Replicas with a ``set_victim_hook`` report each evicted run; at sync
+        the router keeps only the ones no *other* replica still advertises
+        in full, picks the sibling a shed from the evictor would pick, and
+        ships there when the transfer is cheaper than the re-prefill the
+        fleet would otherwise pay on the prefix's next appearance.  Runs some
+        sibling still holds — or that price out — are simply dropped, which
+        is exactly what happened before this path existed."""
+        cm = self.fabric.cm
+        n = len(self.replicas)
+        while self._victims:
+            src, tokens = self._victims.popleft()
+            if len(tokens) < cm.min_ship_tokens or n < 2:
+                continue
+            held_elsewhere = any(
+                r != src and m >= len(tokens)
+                for r, m in self.federation.holders(tokens, now=self.now).items()
+            )
+            if held_elsewhere:
+                continue
+            target = min(
+                (t for t in range(n) if t != src),
+                key=lambda t: (self.topology.distance(src, t), self.fleet.inflight[t], t),
+            )
+            local = self.replicas[target].peek_match(tokens, self.now)
+            if local >= len(tokens):
+                continue
+            d = self.fabric.price(
+                prompt_len=len(tokens), local_matched=local,
+                src_matched=len(tokens), src=src, dst=target, now=self.now,
+            )
+            if d.choice != "ship":
+                continue
+            # the evicting replica no longer holds the bytes — the hook fired
+            # at eviction, so the run itself is the staged payload (the sim's
+            # import derives KV from the token run; an engine without the
+            # hook never reaches this path)
+            if not self.replicas[target].import_kv(
+                tokens, None, ready_t=self.fabric.projected_end(self.now, d)
+            ):
+                continue
+            self.fabric.reserve(self.now, d)
+            d.executed = True
+            self.stats.victim_ships += 1
+            self.stats.victim_tokens += d.tokens_to_move
 
     def _trace_ship(self, session: Session, d: ShipDecision, *, failed: bool = False) -> None:
         """Record one priced ship decision as a span (either outcome): the

@@ -52,12 +52,23 @@ class ReplicaCache:
     a radix KV store, so many suffixes of one hot prefix do not multiply the
     prefix's charge).  Evicting the least-recently-used entries frees their
     charge.  ``match`` returns the longest common run against any entry and
-    refreshes the hit, so a steadily re-used prefix survives."""
+    refreshes the hit, so a steadily re-used prefix survives.
 
-    def __init__(self, budget_tokens: int) -> None:
+    ``page_size`` mirrors the engine's paged KV store jax-free: sharing is
+    page-granular, so an insert reuses only *full* pages of its best match —
+    the partial boundary page is copied (charged), exactly the engine's
+    copy-on-write ingest.  The default (1) reproduces the token-granular
+    charge bit-for-bit.  ``on_evict`` (settable after construction) fires
+    with each evicted run — the router's fleet victim caching listens."""
+
+    def __init__(self, budget_tokens: int, *, page_size: int = 1, on_evict=None) -> None:
         if budget_tokens < 1:
             raise ValueError("budget_tokens must be >= 1")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
         self.budget = budget_tokens
+        self.page_size = page_size
+        self.on_evict = on_evict
         self._lru: "OrderedDict[tuple, int]" = OrderedDict()  # seq -> charged
         self._charged = 0
         self._stamp = 0
@@ -69,6 +80,12 @@ class ReplicaCache:
     @property
     def charged_tokens(self) -> int:
         return self._charged
+
+    @property
+    def pages_held(self) -> int:
+        """Charged tokens rounded up to pages — the sim-side analogue of
+        the engine page table's ``pages_held``."""
+        return -(-self._charged // self.page_size)
 
     @staticmethod
     def _common(a: tuple, b: tuple) -> int:
@@ -109,7 +126,11 @@ class ReplicaCache:
         if key in self._lru:
             self._touch(key)
             return 0
-        charge = len(key) - self.match(key)
+        # page-granular sharing: only full pages of the best match are
+        # reused; the partial boundary page is copied (COW) and charged.
+        # page_size=1 -> held == match, the token-granular legacy charge.
+        held = (self.match(key) // self.page_size) * self.page_size
+        charge = len(key) - held
         self._lru[key] = charge
         self._charged += charge
         self._touch(key)
@@ -117,6 +138,8 @@ class ReplicaCache:
             old, freed = self._lru.popitem(last=False)
             del self._stamps[old]
             self._charged -= freed
+            if self.on_evict is not None:
+                self.on_evict(old)
         return charge
 
     def hottest(self, top_k: int) -> list[tuple[tuple, int]]:
@@ -129,10 +152,12 @@ class ReplicaCache:
 class SimReplica:
     """One simulated decode replica: slots + a finite prefix cache."""
 
-    def __init__(self, rid: int, n_slots: int, *, cache_budget: int) -> None:
+    def __init__(
+        self, rid: int, n_slots: int, *, cache_budget: int, page_size: int = 1
+    ) -> None:
         self.rid = rid
         self.n_slots = n_slots
-        self.cache = ReplicaCache(cache_budget)
+        self.cache = ReplicaCache(cache_budget, page_size=page_size)
         self.inflight = 0
         self.served = 0
         self.reprefill_tokens = 0
@@ -228,6 +253,11 @@ class SimReplica:
         (shipping moves bytes, it does not mint memory)."""
         self._pending.append((int(ready_t), tuple(tokens)))
         return True
+
+    def set_victim_hook(self, cb) -> None:
+        """Route this replica's cache evictions to ``cb(tokens)`` — the
+        router's fleet victim caching subscribes here."""
+        self.cache.on_evict = cb
 
     def finish(self, session: Session) -> None:
         if self.inflight <= 0:
@@ -366,6 +396,11 @@ class FleetResult:
     shipped_tokens: int = 0
     ship_cycles: int = 0
     reprefill_avoided: int = 0
+    ship_segments: int = 0
+    prefetch_ships: int = 0
+    prefetch_tokens: int = 0
+    victim_ships: int = 0
+    victim_tokens: int = 0
     # latency attribution: admission stall decomposed per phase, summed over
     # sessions.  Conservation law (property-tested): queue_wait + dispatch +
     # ship_wait + prefill == admission_stall_total, exactly — the same
@@ -426,6 +461,7 @@ def simulate(
     inter_arrival: int = 16,
     seed: int = 42,
     kv_ship=None,
+    page_size: int | None = None,
     router_kwargs: dict | None = None,
     tracer=None,
     registry=None,
@@ -452,10 +488,8 @@ def simulate(
     it as live views.  Both default off and never perturb the run."""
     cm = cm or FleetCostModel()
     rng = random.Random(seed)
-    replicas = [
-        SimReplica(r, n_slots, cache_budget=cache_budget) for r in range(n_replicas)
-    ]
     router_kwargs = dict(router_kwargs or {})
+    scm = None
     if kv_ship:
         if arm != "federated":
             raise ValueError(
@@ -467,7 +501,16 @@ def simulate(
         from .kvship import ShipCostModel
 
         scm = ShipCostModel() if kv_ship is True else kv_ship
-        router_kwargs["kv_ship"] = replace(scm, c_prefill=cm.c_prefill)
+        scm = replace(scm, c_prefill=cm.c_prefill)
+        router_kwargs["kv_ship"] = scm
+    # page-granular accounting: the replicas' caches mirror the ship model's
+    # page size so the bytes the router prices are the bytes the caches hold
+    # (explicit page_size overrides; 0/None -> token-granular legacy)
+    ps = page_size or getattr(scm, "page_size", 0) or 1
+    replicas = [
+        SimReplica(r, n_slots, cache_budget=cache_budget, page_size=ps)
+        for r in range(n_replicas)
+    ]
     router = make_router(arm, replicas, topology=topology, seed=seed,
                          tracer=tracer, **router_kwargs)
 
@@ -589,5 +632,10 @@ def simulate(
         shipped_tokens=getattr(stats, "shipped_tokens", 0),
         ship_cycles=getattr(stats, "ship_cycles", 0),
         reprefill_avoided=getattr(stats, "reprefill_avoided", 0),
+        ship_segments=getattr(stats, "ship_segments", 0),
+        prefetch_ships=getattr(stats, "prefetch_ships", 0),
+        prefetch_tokens=getattr(stats, "prefetch_tokens", 0),
+        victim_ships=getattr(stats, "victim_ships", 0),
+        victim_tokens=getattr(stats, "victim_tokens", 0),
         phase_cycles=phases,
     )

@@ -7,11 +7,12 @@ python.  The jax-dependent names load lazily so dependency-light consumers
 an accelerator stack installed.
 """
 
+from .paging import PageBundle, PagedPrefixKVStore, PageTable  # noqa: F401
 from .prefixindex import PrefixIndex  # noqa: F401
 from .prefixkv import PrefixKVStore  # noqa: F401
 from .scheduler import CNAScheduler, FIFOScheduler, SchedulerMetrics  # noqa: F401
 
-_LAZY = ("DecodeEngine", "Request", "SlotCache")
+_LAZY = ("DecodeEngine", "Request", "SlotCache", "PagedSlotCache")
 
 
 def __getattr__(name):
@@ -23,6 +24,10 @@ def __getattr__(name):
         from .kvcache import SlotCache
 
         return SlotCache
+    if name == "PagedSlotCache":
+        from .paging_jax import PagedSlotCache
+
+        return PagedSlotCache
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

@@ -94,6 +94,8 @@ class DecodeEngine:
         batching: bool = False,
         pack_width: int | None = None,
         tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
+        paging: bool = False,
+        page_size: int = 16,
     ):
         self.model = model
         self.params = params
@@ -120,11 +122,47 @@ class DecodeEngine:
         # slot lands in (or nearest to) its KV/prefix home domain.
         if placement is not None and self.scheduler.topology is None:
             raise ValueError("placement needs a topology (e.g. CNAScheduler(topology=...))")
-        self.slots = SlotCache.zeros(
-            model, n_slots, cache_len,
-            topology=self.scheduler.topology if placement is not None else None,
-            policy=placement if placement is not None else "nearest_spill",
-        )
+        # paging: the refcounted page table under the storage tier
+        # (repro.serving.paging).  Gated exactly like packed prefill — paging
+        # shares pages between sequences by token identity, which is
+        # byte-identity only where prefill is bitwise batch-invariant (plain
+        # dense attention); recurrent/SSM/sliding-window/VLM families have no
+        # pageable kv_seq axis and keep the contiguous path.
+        self._paged = bool(paging)
+        if paging:
+            gate = getattr(model, "supports_packed_prefill", None)
+            if gate is None or not gate(cache_len):
+                raise ValueError(
+                    "paging=True needs a plain dense-attention stack (the "
+                    "same gate as packed prefill): this model family has no "
+                    "pageable kv_seq axis or is not bitwise batch-invariant "
+                    "— run it with the contiguous path (paging=False)"
+                )
+            if not (prefix_kv is None or prefix_kv is True):
+                raise ValueError(
+                    "paging builds its own page-backed prefix store over the "
+                    "slot cache's page table; pass prefix_kv=True or omit it"
+                )
+            from .paging import PagedPrefixKVStore
+            from .paging_jax import PagedSlotCache
+
+            store_capacity = 16  # the PrefixKVStore default; sizes the table
+            self.slots = PagedSlotCache.zeros(
+                model, n_slots, cache_len, page_size=page_size,
+                store_slack=store_capacity,
+                topology=self.scheduler.topology if placement is not None else None,
+                policy=placement if placement is not None else "nearest_spill",
+                page_topology=self.scheduler.topology if placement is not None else None,
+            )
+            prefix_kv = PagedPrefixKVStore(
+                store_capacity, table=self.slots.table, pool=self.slots.pool,
+            )
+        else:
+            self.slots = SlotCache.zeros(
+                model, n_slots, cache_len,
+                topology=self.scheduler.topology if placement is not None else None,
+                policy=placement if placement is not None else "nearest_spill",
+            )
         if self.slots.telemetry is not None:
             self.scheduler.metrics.placement = self.slots.telemetry
         # prefix_index: a repro.serving.PrefixIndex (or True for a default
@@ -280,6 +318,11 @@ class DecodeEngine:
         """Claim a slot for a granted request and charge its admission
         stalls (domain switch + KV migration); returns the slot."""
         slot = self.slots.claim(req.rid, req.domain)
+        if self._paged:
+            # fresh pages for this admission's deposits land in (or nearest
+            # to) the pool the slot actually got — page placement follows
+            # slot placement instead of growing its own policy
+            self.prefix_kv.alloc_domain = self.slots.last_domain
         migration = self.slot_migration_cost * self.slots.last_distance
         if req.matched_len and len(req.prompt):
             # only the uncached suffix of the KV is charged for an
@@ -335,6 +378,11 @@ class DecodeEngine:
                 )
                 self.tracer.begin("decode", req.rid, now)
             self.slots.insert(slot, cache)
+            if self._paged:
+                # pin the live sequence to its pages: the deposit
+                # _prefill_reuse just made holds the prompt's bundle, and
+                # the slot keeps one reference per page until release
+                self.slots.note_sequence(slot, self.prefix_kv.bundle(req.prompt))
             tok = int(jnp.argmax(logits[0]))
             req.out.append(tok)
             self.tokens = self.tokens.at[slot, 0].set(tok)
@@ -376,6 +424,8 @@ class DecodeEngine:
                     if matched == len(req.prompt):
                         self.slots.insert(slot, cache)
                         store.put([int(t) for t in req.prompt], cache, logits)
+                        if self._paged:
+                            self.slots.note_sequence(slot, store.bundle(req.prompt))
                         ready.append((req, slot, logits))
                     else:
                         cont.append((req, slot, matched, cache))
@@ -411,6 +461,8 @@ class DecodeEngine:
                 if store is not None:
                     single = self.slots.fit_single(self.batcher.extract_row(cache, i))
                     store.put([int(t) for t in req.prompt], single, logits[i : i + 1])
+                    if self._paged:
+                        self.slots.note_sequence(slot, store.bundle(req.prompt))
             for i, boundary in plant:
                 single = self.slots.fit_single(self.batcher.extract_row(cache, i))
                 store.put(boundary, single, logits[i : i + 1])
@@ -431,6 +483,8 @@ class DecodeEngine:
                 assign.append((req, slot, nxt[i]))
                 single = self.slots.fit_single(self.batcher.extract_row(cache, i))
                 store.put([int(t) for t in req.prompt], single, logits[i : i + 1])
+                if self._paged:
+                    self.slots.note_sequence(slot, store.bundle(req.prompt))
         for req, slot, logits in ready:
             if self.tracer:
                 now = self.scheduler.now
@@ -578,6 +632,10 @@ class DecodeEngine:
         registry.gauge(f"{prefix}_sim_time", fn=lambda: self.sim_time)
         registry.gauge(f"{prefix}_active_slots", fn=lambda: len(self.active_req))
         registry.gauge(f"{prefix}_queued", fn=lambda: len(self.scheduler))
+        if self._paged:
+            # the memory-compaction claim as scrapeable numbers:
+            # pages_total / pages_shared / pages_free / kv_bytes_held
+            self.slots.register_into(registry, prefix=prefix)
 
     # -- decode ----------------------------------------------------------------
     def step(self):
@@ -617,6 +675,12 @@ class DecodeEngine:
                     seq = [int(t) for t in req.prompt] + [int(t) for t in req.out[:-1]]
                     pos = int(pos_host[slot])
                     if 0 < pos < self.cache_len and pos == len(seq):
+                        if self._paged:
+                            # the deposit shares the prompt entry's pages
+                            # (the slot already pins them) and writes only
+                            # the decoded suffix; home the fresh pages with
+                            # the retiring slot's pool
+                            self.prefix_kv.alloc_domain = self.slots.slot_domain(slot)
                         self.prefix_kv.put(
                             seq, self.slots.extract(slot), logits[slot : slot + 1]
                         )

@@ -179,6 +179,14 @@ class SlotCache:
         engine — the retirement-time deposit path uses exactly this."""
         if not 0 <= slot < self.n_slots:
             raise ValueError(f"slot {slot} out of range")
+        if slot not in self.owner:
+            # an unowned slot's lane is stale KV from its previous owner (or
+            # zeros); silently handing that out as a cache let a caller
+            # deposit/ship garbage under a live key — refuse instead
+            raise ValueError(
+                f"extract from unowned slot {slot}: claim/insert it first "
+                "(released slots hold stale or zero KV)"
+            )
 
         def take(src, ax):
             if ax is None:

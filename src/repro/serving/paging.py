@@ -1,0 +1,384 @@
+"""Paged KV: one refcounted page table under the whole serving stack.
+
+The contiguous tier stored a prefix shared by 100 sessions up to 100 times:
+every ``PrefixKVStore`` entry was a full ``fit_single`` cache, every ship a
+whole bundle.  This module replaces that storage tier with fixed-size KV
+*pages* — the compact-state move of the paper applied to memory: instead of
+per-sequence copies (the per-socket-hierarchy analogue), one page table
+holds each distinct prefix once and everything that shares it holds a
+reference.
+
+Three layers, deliberately split by dependency:
+
+``PageTable``
+    Pure bookkeeping, jax-free: per-page refcounts, a free heap (or
+    per-domain page pools over ``repro.placement.DomainFreeLists`` when a
+    topology is given), and the gauges the memory-compaction claim is
+    scraped from (``pages_total`` / ``pages_shared`` / ``pages_free`` /
+    ``kv_bytes_held``).  The fleet sim and the ``serving_paging`` bench run
+    entirely on this layer.
+
+``PagedPrefixKVStore``
+    The ``PrefixKVStore`` contract (``put``/``longest``/``get``/``peek``/
+    ``common_run``) re-based on page references.  A deposit shares every
+    full page of the longest already-stored prefix (refcount bump, zero
+    bytes) and writes only the divergent pages; the partial boundary page is
+    *copied*, never mutated — that is copy-on-write at page granularity, and
+    it is why a page with refcount > 1 is immutable.  Byte movement is
+    delegated to a pluggable pool: the jax ``PagedKVPool`` in production,
+    ``pool=None`` for accounting-only (sim/bench) use.
+
+``PagedSlotCache`` / ``PagedKVPool`` (see ``paging_jax``)
+    The decode-facing view.  Import through this module
+    (``repro.serving.paging.PagedSlotCache``) — resolution is lazy so the
+    table/store layer stays importable without jax.
+
+Sharing by token identity is sharing by byte identity here: a position's KV
+is a deterministic function of the token prefix up to it (the packed-prefill
+bitwise contract pins this), so two sequences agreeing on ``tokens[:n]``
+agree on the first ``n`` KV positions, and substituting one's pages for the
+other's is exactly the substitution the prefix-reuse resume path already
+performs — now paid for once instead of per holder.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass
+from typing import Any, Callable
+
+from .prefixkv import PrefixKVStore
+
+
+@dataclass(frozen=True)
+class PageBundle:
+    """A sequence's view of the table: ordered physical page ids covering
+    ``length`` tokens (the last page may be partial).  Immutable — holding a
+    bundle means holding one refcount on each of its pages."""
+
+    pages: tuple[int, ...]
+    length: int
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.pages)
+
+
+class PageTable:
+    """Refcounts + free-page pools for a fixed population of KV pages.
+
+    ``alloc`` hands out pages at refcount 1, ``retain`` is the sharing bump,
+    ``release`` the symmetric drop (a page returns to the free pool only at
+    refcount 0, so releasing a shared prefix can never free pages another
+    sequence still references).  With a ``topology`` the free pages are
+    NUMA-homed through the same ``DomainFreeLists`` the slot cache uses —
+    ``alloc(domain=...)`` prefers the caller's home pool and spills nearest-
+    first, so page placement follows the paper's locality discipline instead
+    of growing its own.
+
+    ``bytes_per_page`` is only for the ``kv_bytes_held`` gauge; the jax pool
+    computes it from real leaf dtypes, jax-free users pass an estimate (or
+    leave 0 and read page counts).
+    """
+
+    def __init__(
+        self, n_pages: int, page_size: int, *, topology=None,
+        bytes_per_page: int = 0,
+    ):
+        if n_pages < 1 or page_size < 1:
+            raise ValueError("need n_pages >= 1 and page_size >= 1")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.bytes_per_page = bytes_per_page
+        self.refs = [0] * n_pages
+        if topology is None:
+            self.pools = None
+            self._free = list(range(n_pages))  # a fresh range is a valid heap
+        else:
+            from repro.placement import DomainFreeLists
+
+            self.pools = DomainFreeLists(n_pages, topology)
+            self._free = None
+        # lifetime counters (monotonic; the gauges above are levels)
+        self.allocs = 0
+        self.shares = 0
+        self.cow_copies = 0
+
+    # -- levels (the scrapeable gauges) ---------------------------------------
+    @property
+    def pages_free(self) -> int:
+        return len(self.pools) if self.pools is not None else len(self._free)
+
+    @property
+    def pages_held(self) -> int:
+        return self.n_pages - self.pages_free
+
+    @property
+    def pages_total(self) -> int:
+        return self.n_pages
+
+    @property
+    def pages_shared(self) -> int:
+        """Pages held by more than one sequence — the compaction win: each
+        of these would be a full copy per holder in the contiguous tier."""
+        return sum(1 for r in self.refs if r > 1)
+
+    @property
+    def kv_bytes_held(self) -> int:
+        return self.pages_held * self.bytes_per_page
+
+    # -- transitions ----------------------------------------------------------
+    def alloc(self, n: int = 1, domain: int | None = None) -> list[int]:
+        """Claim ``n`` free pages at refcount 1 (all-or-nothing).  With
+        per-domain pools a ``domain`` hint places pages in (or nearest to)
+        that home; without one the lowest-id pool spills first."""
+        if n < 0:
+            raise ValueError("alloc of a negative page count")
+        if self.pages_free < n:
+            raise IndexError(
+                f"page table exhausted: need {n} pages, {self.pages_free} free"
+            )
+        if domain is not None and self.pools is not None:
+            if not 0 <= domain < self.pools.topology.n_domains:
+                raise ValueError(f"domain {domain} out of range")
+        out = []
+        for _ in range(n):
+            if self.pools is not None:
+                # claim_* return (page, page_domain); the free-count guard
+                # above means neither can come back None
+                p = (
+                    self.pools.claim_nearest(domain)
+                    if domain is not None
+                    else self.pools.claim_lowest()
+                )[0]
+            else:
+                p = heapq.heappop(self._free)
+            self.refs[p] = 1
+            out.append(p)
+        self.allocs += n
+        return out
+
+    def retain(self, pages) -> None:
+        """Sharing bump: one more holder for each of ``pages``."""
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise ValueError(f"retain of free page {p}")
+            self.refs[p] += 1
+            self.shares += 1
+
+    def release(self, pages) -> list[int]:
+        """Drop one reference per page; pages reaching refcount 0 return to
+        the free pool.  Returns the pages actually freed."""
+        freed = []
+        for p in pages:
+            if self.refs[p] <= 0:
+                raise ValueError(f"release of free page {p}")
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                if self.pools is not None:
+                    self.pools.release(p)
+                else:
+                    heapq.heappush(self._free, p)
+                freed.append(p)
+        return freed
+
+    def refcount(self, page: int) -> int:
+        return self.refs[page]
+
+    def writable(self, page: int) -> bool:
+        """The copy-on-write rule in one predicate: bytes may land in a page
+        only while exactly one holder references it."""
+        return self.refs[page] == 1
+
+    # -- invariants (the property-test surface) -------------------------------
+    def check(self) -> None:
+        """Assert the conservation laws the hypothesis suite sweeps:
+        free + referenced partition the population exactly, and no page is
+        simultaneously free and referenced."""
+        free = set(
+            self.pools.free_slots() if self.pools is not None else self._free
+        )
+        if len(free) != self.pages_free:
+            raise AssertionError("free pool holds duplicate pages")
+        referenced = {p for p, r in enumerate(self.refs) if r > 0}
+        if free & referenced:
+            raise AssertionError(f"pages both free and referenced: {free & referenced}")
+        if len(free) + len(referenced) != self.n_pages:
+            raise AssertionError(
+                f"page conservation violated: {len(free)} free + "
+                f"{len(referenced)} referenced != {self.n_pages} total"
+            )
+        if any(r < 0 for r in self.refs):
+            raise AssertionError("negative refcount")
+
+    def register_into(self, registry, prefix: str = "kv") -> None:
+        """Thin live views into a ``repro.obs.MetricsRegistry`` — the
+        memory-compaction claim as scrapeable numbers: ``pages_total`` /
+        ``pages_shared`` / ``pages_free`` / ``kv_bytes_held``."""
+        registry.gauge(f"{prefix}_pages_total", fn=lambda: self.pages_total)
+        registry.gauge(f"{prefix}_pages_shared", fn=lambda: self.pages_shared)
+        registry.gauge(f"{prefix}_pages_free", fn=lambda: self.pages_free)
+        registry.gauge(f"{prefix}_kv_bytes_held", fn=lambda: self.kv_bytes_held)
+
+
+def pages_for(length: int, page_size: int) -> int:
+    """Pages covering ``length`` tokens (the last one possibly partial)."""
+    return -(-length // page_size)
+
+
+class PagedPrefixKVStore(PrefixKVStore):
+    """``PrefixKVStore`` re-based on page references.
+
+    Entries map token prefixes to ``(PageBundle, logits)`` instead of
+    materialized caches.  ``put`` of a dense (batch=1) cache *pages* it:
+    every full page of the longest already-stored prefix of the key is
+    shared (refcount bump — zero bytes), only the suffix pages are written,
+    and the partial boundary page is copied rather than mutated (page-
+    granularity copy-on-write; a shared page is immutable).  Re-depositing
+    an existing key is free.  ``longest``/``get`` materialize a dense cache
+    back through the pool on demand — byte-identical to what was deposited,
+    so the engine's resume path is unchanged and bitwise-exact.
+
+    ``pool`` moves the actual bytes (``PagedKVPool``); ``pool=None`` runs
+    the identical bookkeeping with no arrays at all — the fleet sim and the
+    jax-free bench share this store's accounting that way.  Eviction (LRU
+    over entry count, plus on page-pool pressure) releases page references;
+    pages shared with a live slot or a newer entry survive their entry.
+    """
+
+    def __init__(
+        self, capacity: int = 16, *, table: PageTable, pool=None,
+        min_plant: int = 4,
+        on_evict: Callable[[tuple[int, ...], PageBundle], None] | None = None,
+    ):
+        super().__init__(capacity, min_plant=min_plant)
+        self.table = table
+        self.pool = pool
+        self.page_size = table.page_size
+        self.on_evict = on_evict
+        # where fresh pages should land (per-domain pools only); the engine
+        # points this at the admitting request's home around each deposit
+        self.alloc_domain: int | None = None
+        # deposit economics: pages actually written vs deposits that cost
+        # nothing because every byte was already held
+        self.pages_written = 0
+        self.zero_page_deposits = 0
+        self.dropped_deposits = 0
+        self.evictions = 0
+
+    # -- bundle plumbing -------------------------------------------------------
+    def bundle(self, tokens) -> PageBundle | None:
+        """The stored bundle under exactly ``tokens`` (no recency touch) —
+        how a live slot pins its sequence's pages."""
+        entry = self._lru.get(self._key(tokens))
+        return entry[0] if entry is not None else None
+
+    @property
+    def logical_pages(self) -> int:
+        """Sum of per-entry page counts (shared pages counted once per
+        holder) — against ``table.pages_held`` this is the sharing ratio."""
+        return sum(b.n_pages for b, _ in self._lru.values())
+
+    def _evict_oldest(self) -> None:
+        key, (bundle, _logits) = self._lru.popitem(last=False)
+        if self.on_evict is not None:
+            self.on_evict(key, bundle)
+        self.table.release(bundle.pages)
+        self.evictions += 1
+
+    # -- the PrefixKVStore contract -------------------------------------------
+    def put(self, tokens, cache, logits) -> None:
+        """Deposit ``tokens``'s cache as pages.  ``cache`` is a dense
+        (batch=1, ``fit_single``-shaped) pytree on the jax path, or anything
+        (ignored) with ``pool=None``.  Already-stored keys refresh recency
+        at zero page cost."""
+        key = self._key(tokens)
+        if not key:
+            return
+        ps = self.page_size
+        if key in self._lru:
+            # same tokens -> same bytes (KV is a deterministic function of
+            # the token prefix): nothing to write, just touch recency
+            self._lru.move_to_end(key)
+            self.zero_page_deposits += 1
+            return
+        # share every full page of the longest stored prefix of this key
+        base = None
+        for stored in self._lru:
+            if len(stored) <= len(key) and stored == key[: len(stored)]:
+                if base is None or len(stored) > len(base):
+                    base = stored
+        shared: tuple[int, ...] = ()
+        start = 0
+        if base is not None:
+            n_full = len(base) // ps
+            shared = self._lru[base][0].pages[:n_full]
+            start = n_full * ps
+            self.table.retain(shared)  # before eviction below can drop base
+        n_new = pages_for(len(key), ps) - len(shared)
+        # make room: the count bound first, then page pressure (evicting an
+        # entry releases references; pages shared elsewhere stay resident)
+        while len(self._lru) >= self.capacity:
+            self._evict_oldest()
+        while self.table.pages_free < n_new and self._lru:
+            self._evict_oldest()
+        if self.table.pages_free < n_new:
+            # nothing left to evict and still no room: deposits are
+            # best-effort, drop this one rather than corrupt the table
+            self.table.release(shared)
+            self.dropped_deposits += 1
+            return
+        new_pages = self.table.alloc(n_new, domain=self.alloc_domain)
+        if base is not None and len(base) % ps:
+            # the boundary page diverges mid-page: its prefix bytes are
+            # re-written into a fresh page (copy-on-write) — the shared
+            # original is never touched
+            self.table.cow_copies += 1
+        if self.pool is not None and n_new:
+            self.pool.write(cache, start, len(key), new_pages)
+        self.pages_written += n_new
+        self.zero_page_deposits += n_new == 0
+        self._lru[key] = (PageBundle(shared + tuple(new_pages), len(key)), logits)
+
+    def longest(self, tokens) -> tuple[int, Any, Any] | None:
+        key = self._key(tokens)
+        best = None
+        for stored in self._lru:
+            if len(stored) <= len(key) and stored == key[: len(stored)]:
+                if best is None or len(stored) > len(best):
+                    best = stored
+        if best is None:
+            self.misses += 1
+            return None
+        self.hits += 1
+        self.reused_tokens += len(best)
+        self._lru.move_to_end(best)
+        bundle, logits = self._lru[best]
+        return len(best), self._materialize(bundle), logits
+
+    def get(self, tokens) -> tuple[Any, Any] | None:
+        key = self._key(tokens)
+        if key not in self._lru:
+            return None
+        self._lru.move_to_end(key)
+        bundle, logits = self._lru[key]
+        return self._materialize(bundle), logits
+
+    def _materialize(self, bundle: PageBundle):
+        if self.pool is None:
+            return None  # accounting-only mode: nobody reads bytes
+        return self.pool.read(bundle)
+
+    def clear(self) -> None:
+        while self._lru:
+            self._evict_oldest()
+
+
+def __getattr__(name):
+    # the jax layer resolves lazily so PageTable/PagedPrefixKVStore stay
+    # importable in the numpy-only lanes (docs, bench smoke, fleet sim)
+    if name in ("PagedSlotCache", "PagedKVPool"):
+        from . import paging_jax
+
+        return getattr(paging_jax, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

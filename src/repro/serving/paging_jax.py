@@ -1,0 +1,210 @@
+"""The jax side of paged KV: a physical page pool and the paged slot view.
+
+``PagedKVPool`` owns one pytree of page-major arrays — per cache leaf, the
+slot cache's ``(batch, kv_seq, ...)`` pair becomes ``(n_pages, page_size,
+...)`` — and moves bytes page-at-a-time between dense (batch=1) caches and
+the pool.  ``PagedSlotCache`` is the ``SlotCache`` the engine drives when
+paging is on: same ``claim``/``insert``/``insert_row``/``extract``/
+``release`` signatures over the same dense decode working set (``decode_step``
+still advances all slots in one fused call — a paged attention kernel that
+reads KV through the page map *in* the kernel is the roadmap's next step),
+but the *storage* tier behind it is the page table: every live slot pins its
+sequence's pages, every deposit lands as pages, and release drops references
+instead of bytes.
+
+Import through ``repro.serving.paging`` — this module is jax-only by
+construction and resolves lazily from there.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kvcache import SlotCache
+from .paging import PageBundle, PageTable
+
+_LOGICAL_LEAF = lambda x: isinstance(x, tuple) and all(  # noqa: E731
+    isinstance(i, (str, type(None))) for i in x
+)
+
+
+class PagedKVPool:
+    """Page-major physical storage for one model's attention KV.
+
+    Built from the model's own cache spec: every leaf must carry both a
+    "batch" and a "kv_seq" logical axis (plain dense attention — the same
+    families ``supports_packed_prefill`` admits).  Recurrent/SSM state has
+    no sequence axis to page; those families keep the contiguous path and
+    this constructor refuses them.
+    """
+
+    def __init__(self, model, cache_len: int, n_pages: int, page_size: int):
+        if cache_len % page_size:
+            raise ValueError(
+                f"page_size {page_size} must divide cache_len {cache_len}"
+            )
+        self.cache_len = cache_len
+        self.n_pages = n_pages
+        self.page_size = page_size
+        abs1 = model.cache_abstract(1, cache_len)
+        logical = model.cache_logical(abs1)
+
+        def ax_of(name):
+            def index(l):
+                if not ("batch" in l and "kv_seq" in l):
+                    raise ValueError(
+                        "paged KV needs attention KV leaves (batch + kv_seq "
+                        f"axes); got logical axes {l} — this model family "
+                        "keeps the contiguous path"
+                    )
+                return l.index(name)
+
+            return index
+
+        # two parallel int-leaved trees (a tuple leaf would itself be a
+        # pytree and break the zipped tree.maps below)
+        self.batch_ax = {
+            k: jax.tree.map(ax_of("batch"), logical[k], is_leaf=_LOGICAL_LEAF)
+            for k in abs1
+            if k != "pos"
+        }
+        self.seq_ax = {
+            k: jax.tree.map(ax_of("kv_seq"), logical[k], is_leaf=_LOGICAL_LEAF)
+            for k in abs1
+            if k != "pos"
+        }
+        self.template = {k: abs1[k] for k in abs1 if k != "pos"}
+
+        def page_leaf(spec, bax, sax):
+            shape = list(spec.shape)
+            shape[bax] = n_pages
+            shape[sax] = page_size
+            return jnp.zeros(tuple(shape), spec.dtype)
+
+        self.pool = {
+            k: jax.tree.map(page_leaf, abs1[k], self.batch_ax[k], self.seq_ax[k])
+            for k in abs1
+            if k != "pos"
+        }
+
+    @property
+    def bytes_per_page(self) -> int:
+        total = 0
+        for leaves in jax.tree.leaves(self.pool):
+            total += leaves.size // self.n_pages * leaves.dtype.itemsize
+        return total
+
+    def write(self, cache, start: int, end: int, pages) -> None:
+        """Copy token positions ``[start, end)`` of a dense (batch=1,
+        ``fit_single``-shaped) cache into ``pages`` (page-aligned ``start``;
+        the final page takes the source bytes through its page boundary, so
+        the in-page tail beyond ``end`` round-trips exactly)."""
+        if start % self.page_size:
+            raise ValueError(f"unaligned page write at token {start}")
+        ps = self.page_size
+
+        def put_page(dst, src, bax, sax, page, p0):
+            lane = jax.lax.dynamic_slice_in_dim(src, p0, ps, axis=sax)
+            idx = [0] * dst.ndim
+            idx[bax] = page
+            return jax.lax.dynamic_update_slice(
+                dst, lane.astype(dst.dtype), tuple(idx)
+            )
+
+        for j, page in enumerate(pages):
+            p0 = start + j * ps
+            if p0 >= end:
+                raise ValueError(f"more pages than tokens: {pages} for [{start},{end})")
+            self.pool = {
+                k: jax.tree.map(
+                    lambda d, s, b, x: put_page(d, jnp.asarray(s), b, x, page, p0),
+                    self.pool[k], cache[k], self.batch_ax[k], self.seq_ax[k],
+                )
+                for k in self.pool
+            }
+
+    def read(self, bundle: PageBundle):
+        """Materialize a dense (batch=1, ``fit_single``-shaped) cache from
+        ``bundle`` — byte-identical to the cache its pages were written
+        from, ``pos`` seeded at the bundle's length so the engine's resume
+        path consumes it exactly like a locally prefilled deposit."""
+        ps = self.page_size
+
+        def fetch(dst, src, bax, sax, page, p0):
+            lane = jax.lax.dynamic_slice_in_dim(src, page, 1, axis=bax)
+            idx = [0] * dst.ndim
+            idx[sax] = p0
+            return jax.lax.dynamic_update_slice(dst, lane, tuple(idx))
+
+        dense = {
+            k: jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), self.template[k])
+            for k in self.template
+        }
+        for j, page in enumerate(bundle.pages):
+            dense = {
+                k: jax.tree.map(
+                    lambda d, s, b, x: fetch(d, s, b, x, page, j * ps),
+                    dense[k], self.pool[k], self.batch_ax[k], self.seq_ax[k],
+                )
+                for k in dense
+            }
+        dense["pos"] = jnp.asarray(bundle.length, jnp.int32)
+        return dense
+
+
+class PagedSlotCache(SlotCache):
+    """``SlotCache`` whose storage tier is a refcounted page table.
+
+    The dense decode working set (one lane per slot) behaves exactly as the
+    base class — that is what keeps decode bitwise-identical — while
+    ``seq_pages`` pins each live slot's sequence to its physical pages:
+    claimed at admission from the deposit the engine just made, released
+    (reference drop, not byte drop) at retirement.  Gauges delegate to the
+    table; ``register_into`` makes them scrapeable.
+    """
+
+    @classmethod
+    def zeros(
+        cls, model, n_slots: int, cache_len: int, *, page_size: int = 16,
+        n_pages: int | None = None, store_slack: int = 16, topology=None,
+        policy="nearest_spill", cost_model=None, page_topology=None,
+    ):
+        self = super().zeros(
+            model, n_slots, cache_len,
+            topology=topology, policy=policy, cost_model=cost_model,
+        )
+        if n_pages is None:
+            # room for every slot's live sequence plus a full prefix store
+            # of ``store_slack`` worst-case entries; sharing keeps most of
+            # it free, which is the point of the gauges
+            n_pages = (n_slots + store_slack) * (cache_len // page_size)
+        self.pool = PagedKVPool(model, cache_len, n_pages, page_size)
+        self.table = PageTable(
+            n_pages, page_size, topology=page_topology,
+            bytes_per_page=self.pool.bytes_per_page,
+        )
+        self.seq_pages = {}
+        return self
+
+    def note_sequence(self, slot: int, bundle: PageBundle | None) -> None:
+        """Pin ``slot``'s sequence to ``bundle``'s pages (one reference per
+        page, dropped at release) — how a live sequence *is* a list of page
+        indices even while the store's LRU churns underneath it."""
+        if slot not in self.owner:
+            raise ValueError(f"note_sequence on unowned slot {slot}")
+        prev = self.seq_pages.pop(slot, None)
+        if prev:
+            self.table.release(prev)
+        if bundle is not None:
+            self.table.retain(bundle.pages)
+            self.seq_pages[slot] = bundle.pages
+
+    def release(self, slot: int):
+        prev = self.seq_pages.pop(slot, None)
+        if prev:
+            self.table.release(prev)
+        super().release(slot)
+
+    def register_into(self, registry, prefix: str = "kv") -> None:
+        self.table.register_into(registry, prefix=prefix)

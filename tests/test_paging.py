@@ -1,0 +1,530 @@
+"""Paged KV with copy-on-write prefix sharing: page-table invariants
+(property-tested), the paged prefix store's sharing/eviction semantics, page-
+granular ship pricing and multi-source planning, the router's prefetch and
+victim-caching movers, and the engine-level bitwise-equality contract (a
+paged engine is indistinguishable from the slot engine on outputs and
+position accounting).
+
+The jax-free tests exercise ``repro.serving.paging`` in accounting mode
+(``pool=None``) — identical bookkeeping, no arrays — which is the same
+surface the fleet sim and the bench smoke lane rely on.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container lacks hypothesis: seeded fallback
+    from _hypothesis_compat import given, settings, st
+
+from repro.serving.paging import PagedPrefixKVStore, PageTable, pages_for
+
+
+# -- page-table invariants (property-tested) ----------------------------------
+
+
+def _assert_conservation(t: PageTable) -> None:
+    """free + referenced partitions the table, and nothing is negative."""
+    t.check()  # raises on: overlap, negative refs, bad partition
+    referenced = sum(1 for r in t.refs if r > 0)
+    assert t.pages_free + referenced == t.pages_total
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(min_value=0, max_value=2),
+                  st.integers(min_value=1, max_value=6)),
+        min_size=1, max_size=50,
+    )
+)
+def test_refcount_conservation_under_random_ops(ops):
+    """alloc/retain/release in any order: free + referenced == total after
+    every step, no page both free and referenced, no negative refcounts."""
+    t = PageTable(24, 8)
+    held = []  # live references we own: each entry is one retain's worth
+    for kind, n in ops:
+        if kind == 0:
+            try:
+                held.append(tuple(t.alloc(n)))
+            except IndexError:
+                pass  # exhausted: all-or-nothing, table must stay intact
+        elif kind == 1 and held:
+            run = held[n % len(held)]
+            t.retain(run)
+            held.append(run)
+        elif kind == 2 and held:
+            t.release(held.pop(n % len(held)))
+        _assert_conservation(t)
+    for run in held:
+        t.release(run)
+    _assert_conservation(t)
+    assert t.pages_free == t.pages_total
+
+
+def test_alloc_is_all_or_nothing():
+    t = PageTable(4, 8)
+    t.alloc(3)
+    with pytest.raises(IndexError):
+        t.alloc(2)  # only 1 free
+    assert t.pages_free == 1  # the failed alloc leaked nothing
+    _assert_conservation(t)
+
+
+def test_release_below_zero_refuses():
+    t = PageTable(4, 8)
+    (p,) = t.alloc(1)
+    t.release([p])
+    with pytest.raises(ValueError):
+        t.release([p])
+
+
+class _RecordingPool:
+    """Pool stub that asserts the COW contract at the write boundary: every
+    page handed to ``write`` must be exclusively owned (refcount 1) — a
+    write to a shared page would corrupt every other holder bitwise."""
+
+    def __init__(self, table: PageTable):
+        self.table = table
+        self.writes = []
+
+    def write(self, cache, start, end, pages):
+        for p in pages:
+            assert self.table.refcount(p) == 1, (
+                f"COW violation: write to page {p} with "
+                f"refcount {self.table.refcount(p)}"
+            )
+        self.writes.append((start, end, tuple(pages)))
+
+    def read(self, bundle):
+        return {"pos": bundle.length}
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    picks=st.lists(
+        st.tuples(st.integers(min_value=0, max_value=3),
+                  st.integers(min_value=1, max_value=40)),
+        min_size=1, max_size=30,
+    )
+)
+def test_cow_never_mutates_a_shared_page(picks):
+    """Random deposits of overlapping prefixes: every page the store writes
+    is freshly allocated (refcount 1).  Shared pages are immutable — the
+    partial boundary page of a shared prefix is *copied*, never extended in
+    place."""
+    t = PageTable(64, 8)
+    store = PagedPrefixKVStore(8, table=t, pool=_RecordingPool(t))
+    for fam, length in picks:
+        key = tuple(10_000 * fam + j for j in range(length))
+        store.put(key, {"pos": length}, None)
+        _assert_conservation(t)
+    store.clear()
+    _assert_conservation(t)
+    assert t.pages_free == t.pages_total
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    lengths=st.lists(st.integers(min_value=1, max_value=40),
+                     min_size=2, max_size=24),
+    capacity=st.integers(min_value=2, max_value=6),
+)
+def test_release_of_shared_prefix_never_frees_referenced_pages(lengths, capacity):
+    """LRU churn evicts entries whose pages other entries still share; every
+    surviving entry's pages must stay referenced (refcount >= 1) no matter
+    which holder was dropped."""
+    t = PageTable(48, 8)
+    store = PagedPrefixKVStore(capacity, table=t)
+    base = tuple(range(100))
+    for i, ln in enumerate(lengths):
+        # nested prefixes of one family + a divergent suffix per deposit,
+        # so entries share pages aggressively and evictions hit shared runs
+        store.put(base[:ln] + (1_000 + i,), None, None)
+        _assert_conservation(t)
+        for _key, (bundle, _logits) in store._lru.items():
+            for p in bundle.pages:
+                assert t.refcount(p) >= 1, f"page {p} freed under a live entry"
+
+
+# -- paged store sharing semantics (jax-free accounting mode) -----------------
+
+
+def test_extensions_share_full_prefix_pages():
+    t = PageTable(32, 8)
+    store = PagedPrefixKVStore(8, table=t)
+    base = tuple(range(16))  # exactly 2 pages
+    store.put(base, None, None)
+    for s in (101, 202):
+        store.put(base + (s,) * 8, None, None)  # +1 page each
+    # 2 base pages held once (refcount 3), one suffix page per extension
+    assert t.pages_held == 2 + 2
+    assert store.logical_pages == 2 + 3 + 3
+    assert t.pages_shared == 2
+    assert [t.refcount(p) for p in store.bundle(base).pages] == [3, 3]
+    _assert_conservation(t)
+
+
+def test_reput_of_stored_key_costs_zero_pages():
+    t = PageTable(32, 8)
+    store = PagedPrefixKVStore(8, table=t)
+    key = tuple(range(20))
+    store.put(key, None, None)
+    held = t.pages_held
+    store.put(key, None, None)
+    assert t.pages_held == held
+    assert store.zero_page_deposits == 1
+
+
+def test_unaligned_prefix_pays_one_cow_page():
+    t = PageTable(32, 8)
+    store = PagedPrefixKVStore(8, table=t)
+    base = tuple(range(12))  # 1 full page + 4 tokens into page 2
+    store.put(base, None, None)
+    store.put(base + (7,) * 4, None, None)  # extends within page 2
+    # full page shared; the partial page is copied, not mutated
+    assert t.cow_copies == 1
+    assert t.refcount(store.bundle(base).pages[0]) == 2
+    assert t.refcount(store.bundle(base).pages[1]) == 1  # still exclusive
+    _assert_conservation(t)
+
+
+def test_eviction_keeps_pages_other_entries_share():
+    t = PageTable(32, 8)
+    store = PagedPrefixKVStore(2, table=t)
+    base = tuple(range(16))
+    store.put(base, None, None)
+    store.put(base + (1,) * 8, None, None)
+    store.put(base + (2,) * 8, None, None)  # capacity 2: evicts base entry
+    assert store.bundle(base) is None
+    # the evicted entry's pages survive through the extensions' references
+    for key in (base + (1,) * 8, base + (2,) * 8):
+        b = store.bundle(key)
+        assert b is not None and all(t.refcount(p) >= 1 for p in b.pages)
+    _assert_conservation(t)
+
+
+def test_deposit_dropped_when_pool_exhausted():
+    t = PageTable(4, 8)
+    store = PagedPrefixKVStore(8, table=t)
+    store.put(tuple(range(32)), None, None)  # 4 pages: fills the table
+    store.put(tuple(9_000 + j for j in range(40)), None, None)  # needs 5
+    assert store.dropped_deposits == 1
+    _assert_conservation(t)  # the failed deposit leaked nothing
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+
+
+def test_page_gauges_register():
+    from repro.obs import MetricsRegistry
+
+    t = PageTable(16, 8, bytes_per_page=64)
+    t.alloc(3)
+    reg = MetricsRegistry()
+    t.register_into(reg, prefix="kv")
+    snap = reg.collect()
+    assert snap["kv_pages_total"] == 16
+    assert snap["kv_pages_free"] == 13
+    assert snap["kv_pages_shared"] == 0
+    assert snap["kv_kv_bytes_held"] == 3 * 64
+
+
+# -- page-granular ship pricing (repro.router.kvship) -------------------------
+
+
+def test_decide_page_pricing_trims_target_held_pages():
+    from repro.router.kvship import ShipCostModel, decide
+
+    kw = dict(prompt_len=100, local_matched=20, src_matched=80, src=1, dst=0,
+              distance=1)
+    legacy = decide(cm=ShipCostModel(page_size=0), **kw)
+    paged = decide(cm=ShipCostModel(page_size=16), **kw)
+    # ps=0 is byte-for-byte the whole-bundle charge
+    assert legacy.ship_tokens == legacy.tokens_to_move == 80
+    # ps=16: the target's 20 tokens cover one full page -> 16 fewer ship
+    assert paged.ship_tokens == 80 - 16
+    assert paged.ship_cycles < legacy.ship_cycles
+
+
+def test_plan_ship_sources_disjoint_page_ranges():
+    from repro.router.kvship import ShipCostModel, plan_ship
+
+    cm = ShipCostModel(page_size=16)
+    d = plan_ship(
+        prompt_len=128, local_matched=0, holders={1: 32, 2: 96}, dst=0,
+        distance_of=lambda s: 1 if s == 1 else 2, cm=cm,
+    )
+    # the near holder ships the pages it has; the far one only the rest
+    assert [(s.src, s.start_tok, s.end_tok) for s in d.segments] == [
+        (1, 0, 32), (2, 32, 96),
+    ]
+    assert d.ship_tokens == 96 and d.src_matched == 96
+    # each segment is priced separately (fragmentation pays its setup)
+    assert d.ship_cycles == cm.xfer_cycles(32, 1) + cm.xfer_cycles(64, 2)
+    assert d.choice == "ship"
+
+
+def test_plan_ship_starts_at_target_page_boundary():
+    from repro.router.kvship import ShipCostModel, plan_ship
+
+    d = plan_ship(
+        prompt_len=128, local_matched=37, holders={1: 96}, dst=0,
+        distance_of=lambda s: 1, cm=ShipCostModel(page_size=16),
+    )
+    # 37 held tokens cover 2 full pages: shipping starts at token 32
+    assert d.segments[0].start_tok == 32
+    assert d.ship_tokens == 96 - 32
+
+
+def test_plan_ship_requires_page_pricing():
+    from repro.router.kvship import ShipCostModel, plan_ship
+
+    with pytest.raises(ValueError, match="page_size"):
+        plan_ship(prompt_len=8, local_matched=0, holders={1: 8}, dst=0,
+                  distance_of=lambda s: 1, cm=ShipCostModel(page_size=0))
+
+
+# -- router: multi-source execution, prefetch, victim caching -----------------
+
+
+def _router(replicas, **kw):
+    from repro.router.router import ReplicaRouter
+
+    return ReplicaRouter(replicas, sync_every=0, **kw)
+
+
+def test_paged_ship_executes_multi_source_segments():
+    from repro.router.kvship import ShipCostModel
+    from repro.router.router import Session
+    from repro.router.sim import SimReplica
+
+    reps = [SimReplica(r, 1, cache_budget=600) for r in range(3)]
+    base = tuple(range(96))
+    reps[1].cache.insert(base[:32])
+    reps[2].cache.insert(base)
+    reps[1].inflight = reps[2].inflight = 1  # full: only replica 0 can take it
+    router = _router(reps, kv_ship=ShipCostModel(page_size=16))
+    router.sync()
+    s = Session(sid=0, prompt=base + (7, 8, 9, 10), decode_len=1)
+    router.submit(s)
+    out = router.dispatch_one()
+    assert out is not None and out[1] == 0
+    d = s.ship
+    assert d is not None and d.executed
+    # flat topology: equal distances, ties to the lower id -> replica 1
+    # ships the pages it covers, replica 2 only the remainder
+    assert [(seg.src, seg.start_tok, seg.end_tok) for seg in d.segments] == [
+        (1, 0, 32), (2, 32, 96),
+    ]
+    assert router.stats.ships == 1
+    assert router.stats.ship_segments == 2
+    assert router.stats.shipped_tokens == 96
+    # the imports landed: replica 0 resumed from the full shipped prefix
+    assert s.local_matched == 96
+
+
+def test_prefetch_ships_hot_prefix_ahead_of_shed():
+    from repro.router.kvship import ShipCostModel
+    from repro.router.sim import SimReplica
+
+    reps = [SimReplica(0, 2, cache_budget=600), SimReplica(1, 2, cache_budget=600)]
+    hot = tuple(range(48))
+    reps[0].cache.insert(hot)
+    reps[0].inflight = 2  # at cap: the next dispatch would shed to replica 1
+    router = _router(reps, kv_ship=ShipCostModel(page_size=16), prefetch=True)
+    assert router.stats.prefetch_ships == 0
+    router.sync()
+    assert router.stats.prefetch_ships == 1
+    assert router.stats.prefetch_tokens == 48
+    # the prefix is resident on the shed target before any session needs it
+    assert reps[1].peek_match(hot, now=10_000) == 48
+    # deduped: a second sync does not re-ship the same prefix
+    router.sync()
+    assert router.stats.prefetch_ships == 1
+
+
+def test_prefetch_idle_fleet_ships_nothing():
+    from repro.router.kvship import ShipCostModel
+    from repro.router.sim import SimReplica
+
+    reps = [SimReplica(r, 2, cache_budget=600) for r in range(2)]
+    reps[0].cache.insert(tuple(range(48)))
+    router = _router(reps, kv_ship=ShipCostModel(page_size=16), prefetch=True)
+    router.sync()  # nobody near cap: no speculation
+    assert router.stats.prefetch_ships == 0
+
+
+def test_victim_cache_rehomes_last_fleet_copy():
+    from repro.router.kvship import ShipCostModel
+    from repro.router.sim import SimReplica
+
+    reps = [SimReplica(0, 2, cache_budget=40), SimReplica(1, 2, cache_budget=600)]
+    victim = tuple(range(32))
+    router = _router(reps, kv_ship=ShipCostModel(page_size=16), victim_cache=True)
+    reps[0].cache.insert(victim)
+    reps[0].cache.insert(tuple(9_000 + j for j in range(32)))  # evicts victim
+    assert reps[0].peek_match(victim) == 0  # gone from the evictor
+    router.sync()
+    assert router.stats.victim_ships == 1
+    assert router.stats.victim_tokens == 32
+    assert reps[1].peek_match(victim, now=10_000) == 32
+
+
+def test_victim_still_held_elsewhere_is_dropped():
+    from repro.router.kvship import ShipCostModel
+    from repro.router.sim import SimReplica
+
+    reps = [SimReplica(0, 2, cache_budget=40),
+            SimReplica(1, 2, cache_budget=600),
+            SimReplica(2, 2, cache_budget=600)]
+    victim = tuple(range(32))
+    reps[1].cache.insert(victim)  # a sibling already holds it
+    router = _router(reps, kv_ship=ShipCostModel(page_size=16), victim_cache=True)
+    router.sync()  # replica 1 advertises the run
+    reps[0].cache.insert(victim)
+    reps[0].cache.insert(tuple(9_000 + j for j in range(32)))
+    router.sync()
+    assert router.stats.victim_ships == 0  # not the last copy: just drop
+
+
+def test_speculative_movers_require_a_fabric():
+    from repro.router.sim import SimReplica
+
+    reps = [SimReplica(r, 2, cache_budget=100) for r in range(2)]
+    with pytest.raises(ValueError, match="kv_ship"):
+        _router(reps, prefetch=True)
+    with pytest.raises(ValueError, match="kv_ship"):
+        _router(reps, victim_cache=True)
+
+
+# -- engine-level contract (jax) ----------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    import jax
+
+    from repro.configs.base import get_reduced_config
+    from repro.models.registry import build_model
+
+    cfg = get_reduced_config("granite_3_8b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def _shared_prefix_requests(cfg, n=6, plen=12, shared=8, max_new=4, seed=3):
+    from repro.serving.engine import Request
+
+    rng = np.random.default_rng(seed)
+    prefix = rng.integers(0, cfg.vocab, shared)
+    return [
+        Request(
+            rid=i,
+            prompt=np.concatenate(
+                [prefix, rng.integers(0, cfg.vocab, plen - shared)]
+            ).astype(np.int32),
+            max_new=max_new,
+            domain=i % 2,
+        )
+        for i in range(n)
+    ]
+
+
+def test_extract_unowned_slot_raises(small_model):
+    """Regression: extracting a released (or never-claimed) slot used to
+    hand out the previous owner's stale KV as a live cache."""
+    import jax
+
+    from repro.serving.kvcache import SlotCache
+
+    cfg, model, params = small_model
+    slots = SlotCache.zeros(model, 2, 16)
+    logits, cache = jax.jit(model.prefill)(
+        params, {"tokens": np.zeros((1, 4), np.int32)}
+    )
+    slot = slots.claim("req")
+    slots.insert(slot, slots.fit_single(cache))
+    slots.extract(slot)  # owned: fine
+    slots.release(slot)
+    with pytest.raises(ValueError, match="unowned slot"):
+        slots.extract(slot)
+    with pytest.raises(ValueError, match="unowned slot"):
+        slots.extract(1)  # never claimed
+
+
+def test_paged_engine_bitwise_equals_slot_engine(small_model):
+    """The tentpole contract: a paged engine produces bitwise-identical
+    outputs to the slot engine on a shared-prefix workload, with the same
+    ``prefill_positions + reused_positions`` conservation — and leaves a
+    consistent page table with every slot's pin released."""
+    from repro.serving.engine import DecodeEngine, Request
+
+    cfg, model, params = small_model
+    base = _shared_prefix_requests(cfg)
+
+    def run(**kw):
+        reqs = [Request(r.rid, r.prompt, r.max_new, r.domain) for r in base]
+        eng = DecodeEngine(model, params, n_slots=3, cache_len=32, **kw)
+        eng.run(reqs)
+        return eng, {r.rid: tuple(r.out) for r in reqs}
+
+    ref, ref_out = run(prefix_kv=True)
+    paged, paged_out = run(paging=True, page_size=8)
+    assert paged_out == ref_out
+    assert paged.prefill_positions == ref.prefill_positions
+    assert paged.reused_positions == ref.reused_positions
+    assert paged.reused_positions > 0  # the workload actually shared
+    t = paged.slots.table
+    t.check()
+    assert t.pages_shared > 0  # prefixes landed on shared physical pages
+    assert paged.slots.seq_pages == {}  # every retired slot dropped its pin
+
+
+def test_paged_engine_refuses_non_dense_families():
+    import jax
+
+    from repro.configs.base import get_reduced_config
+    from repro.models.registry import build_model
+    from repro.serving.engine import DecodeEngine
+
+    cfg = get_reduced_config("mamba2_130m")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="dense-attention"):
+        DecodeEngine(model, params, n_slots=2, cache_len=32, paging=True)
+
+
+def test_paged_engine_rejects_external_prefix_store(small_model):
+    from repro.serving.engine import DecodeEngine
+    from repro.serving.prefixkv import PrefixKVStore
+
+    cfg, model, params = small_model
+    with pytest.raises(ValueError, match="page-backed"):
+        DecodeEngine(model, params, n_slots=2, cache_len=32, paging=True,
+                     prefix_kv=PrefixKVStore())
+
+
+def test_paged_engine_registers_page_gauges(small_model):
+    from repro.obs import MetricsRegistry
+    from repro.serving.engine import DecodeEngine
+
+    cfg, model, params = small_model
+    eng = DecodeEngine(model, params, n_slots=2, cache_len=32, paging=True,
+                       page_size=8)
+    eng.run(_shared_prefix_requests(cfg, n=3))
+    reg = MetricsRegistry()
+    eng.register_metrics(reg)
+    snap = reg.collect()
+    for g in ("engine_pages_total", "engine_pages_shared", "engine_pages_free",
+              "engine_kv_bytes_held"):
+        assert g in snap, g
+    assert snap["engine_pages_total"] > 0
+    assert snap["engine_kv_bytes_held"] > 0
+    assert "pages_total" in reg.render_prometheus()
