@@ -4,8 +4,10 @@ benches (serving scheduler, slot placement, collective schedules, roofline).
     PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
 Sections: paper, locks, restriction, placement, serving, serving_prefix,
-serving_continuous, serving_paging, router, obs, collectives, moe_ep,
+serving_continuous, serving_paging, router, region, obs, collectives, moe_ep,
 roofline.  Default: all.
+``region`` (fleets-of-fleets under the diurnal multi-tenant trace,
+``benchmarks/region_bench.py``) is jax-free and smoke-lane-safe.
 ``serving_prefix`` is the jax-free shared-prefix slice of the serving section
 (prefix-index build/lookup/re-home) so the dependency-light smoke lane can
 cover it; ``serving`` already includes it.  ``router`` (fleet routing on the
@@ -74,7 +76,7 @@ def main() -> int:
         common.SMOKE = True
     sections = args or [
         "paper", "locks", "restriction", "placement", "serving", "router",
-        "obs", "collectives", "moe_ep", "roofline",
+        "region", "obs", "collectives", "moe_ep", "roofline",
     ]  # "serving" subsumes serving_prefix and serving_continuous
     t0 = time.time()
     # every section runs inside bench_section so it emits BENCH_<name>.json
@@ -125,6 +127,11 @@ def main() -> int:
 
         with common.bench_section("router"):
             router_bench.run_all()
+    if "region" in sections:
+        from . import region_bench
+
+        with common.bench_section("region"):
+            region_bench.run_all()
     if "obs" in sections:
         from . import obs_bench
 

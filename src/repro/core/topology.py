@@ -92,6 +92,23 @@ def pod(n_pods: int, sockets_per_pod: int, cores_per_socket: int = 1) -> Topolog
     )
 
 
+def region(n_regions: int, fleets_per_region: int, name: str | None = None) -> Topology:
+    """Third hierarchy level: whole fleets nested in geographic regions.
+
+    Structurally a ``pod`` topology one level up — the *domains* are fleets
+    and the *groups* are regions — so ``distance`` answers the region
+    ladder: 0 = same fleet, 1 = sibling fleet (intra-region fabric),
+    2 = cross-region (the expensive hop ``ShipCostModel.fabric_ladder``
+    prices separately).  ``repro.region.RegionRouter`` disciplines dispatch
+    over this exactly as ``ReplicaRouter`` does over replica topologies."""
+    n = n_regions * fleets_per_region
+    return Topology(
+        name or f"region{n_regions}x{fleets_per_region}",
+        n,
+        tuple(f // fleets_per_region for f in range(n)),
+    )
+
+
 def table(assignment, n_domains: int | None = None, name: str = "table") -> Topology:
     """Explicit id -> domain schedule (cycled past its length)."""
     assignment = tuple(assignment)

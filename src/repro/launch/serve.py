@@ -22,6 +22,13 @@ process (RATE requests per engine tick, mixed prompt lengths) against the
 bucketed/packed/AOT-warmed batched engine and prints wall-clock tokens/sec +
 TTFT p50/p99 — the live demo of ``repro.serving.batching``.  Add
 ``--no-batching`` to feel the difference on the per-request engine.
+
+``--regions N`` runs the region tier instead (jax-free): a deterministic
+diurnal multi-tenant trace (``repro.workload``) replayed through
+``repro.region`` — N regions of simulated fleets behind the federated
+``RegionRouter``, against a region-oblivious least-loaded control — and
+prints locality, admission-stall percentiles, and per-tenant stall
+summaries.  ``--tenant-caps K`` adds the (tenant x fleet) fairness governor.
 """
 
 from __future__ import annotations
@@ -88,6 +95,16 @@ def main(argv=None) -> int:
     ap.add_argument("--no-kv-ship", action="store_true",
                     help="disable priced prefix-KV shipping in the fleet "
                          "demo (PR 4's shed-and-re-prefill behaviour)")
+    ap.add_argument("--regions", type=int, default=0, metavar="N",
+                    help="run the region tier demo: a diurnal multi-tenant "
+                         "trace over N regions of fleets (jax-free)")
+    ap.add_argument("--tenants", type=int, default=4,
+                    help="with --regions: tenant profiles in the trace mix")
+    ap.add_argument("--horizon", type=int, default=4096,
+                    help="with --regions: trace horizon in ticks")
+    ap.add_argument("--tenant-caps", type=int, default=None, metavar="K",
+                    help="with --regions: cap each (tenant x fleet) pair at "
+                         "K in-flight sessions (the fairness governor)")
     ap.add_argument("--arrivals", type=float, default=None, metavar="RATE",
                     help="drive a continuous Poisson arrival process at RATE "
                          "requests/tick (mixed prompt lengths) and print "
@@ -112,6 +129,8 @@ def main(argv=None) -> int:
                          "Prometheus-style rendering at exit")
     args = ap.parse_args(argv)
 
+    if args.regions > 0:
+        return serve_region(args)
     if args.arrivals is not None:
         return serve_arrivals(args)
     if args.replicas > 1:
@@ -206,6 +225,56 @@ def main(argv=None) -> int:
             path = args.trace if len(run) == 1 else f"{name}.{args.trace}"
             _emit_obs(args, tracer, None, trace_path=path)
     _emit_obs(args, None, registry)
+    return 0
+
+
+def serve_region(args) -> int:
+    """The --regions demo: the diurnal multi-tenant trace through the region
+    tier (fleets-of-fleets, jax-free), paired against a region-oblivious
+    least-loaded control on the identical schedule."""
+    from repro.region import simulate_region
+    from repro.workload import DiurnalWave, TraceGenerator, uniform_tenants
+
+    tracer, registry = _mk_obs(args)
+    gen = TraceGenerator(
+        n_regions=args.regions,
+        tenants=uniform_tenants(args.tenants, args.regions,
+                                followup_p=0.4, suffix_len=24),
+        seed=args.seed,
+        wave=DiurnalWave(period=max(256, args.horizon // 3), amplitude=0.8),
+        base_rate=0.03,
+    )
+    trace = gen.generate(horizon=args.horizon)
+    print(f"[trace] {len(trace)} requests, {args.regions} regions, "
+          f"{args.tenants} tenants, "
+          f"{sum(1 for r in trace.requests if r.turn > 0)} follow-up turns")
+    t0 = time.time()
+    results = {}
+    for arm in ("region", "least_loaded"):
+        results[arm] = simulate_region(
+            arm, trace, seed=args.seed,
+            tenant_caps=args.tenant_caps if arm == "region" else None,
+            tracer=tracer if arm == "region" else None,
+            registry=registry if arm == "region" else None,
+        )
+    wall = time.time() - t0
+    for arm, r in results.items():
+        print(f"[{arm}] served={r.served} rejected={r.rejected} "
+              f"locality={r.reuse_fraction:.2f} "
+              f"reprefill_tokens={r.reprefill_tokens}/{r.routed_tokens} "
+              f"stall_p50={r.admission_stall_p50:.0f} "
+              f"stall_p99={r.admission_stall_p99:.0f} sheds={r.sheds} "
+              f"deposits={r.deposits} per_fleet={r.per_fleet_served}")
+    reg = results["region"]
+    print("  [tenants]")
+    for tenant, summary in sorted(reg.tenant_stalls.summary().items()):
+        print(f"    tenant {tenant}: stall p50={summary['p50']:.0f} "
+              f"p99={summary['p99']:.0f} n={summary['count']}")
+    if reg.tenant_parked or reg.tenant_rejected:
+        print(f"  [governor] parked={reg.tenant_parked} "
+              f"unparked={reg.tenant_unparked} rejected={reg.tenant_rejected}")
+    print(f"  (wall={wall:.1f}s)")
+    _emit_obs(args, tracer, registry)
     return 0
 
 

@@ -26,13 +26,14 @@ tests pin it.
 """
 
 from .export import flame, render_prometheus, to_jsonl
-from .registry import BoundedHistogram, Counter, Gauge, MetricsRegistry
+from .registry import BoundedHistogram, Counter, Gauge, HistogramVector, MetricsRegistry
 from .trace import NULL_TRACER, NullTracer, Span, Tracer, trace_key
 
 __all__ = [
     "BoundedHistogram",
     "Counter",
     "Gauge",
+    "HistogramVector",
     "MetricsRegistry",
     "NULL_TRACER",
     "NullTracer",

@@ -134,6 +134,56 @@ class BoundedHistogram:
         }
 
 
+class HistogramVector:
+    """A labeled family of ``BoundedHistogram``s — one histogram per label
+    value (e.g. per-tenant admission stalls in the region tier).
+
+    Labels are created lazily on first ``observe``; each child keeps the
+    usual bounded-reservoir guarantees.  Child seeds derive deterministically
+    from the family seed and the label's creation order, so a run that
+    observes the same labeled samples in the same order reproduces the same
+    retained reservoirs bit-for-bit.  Renders as one Prometheus summary per
+    label (``name{label="..."}``) and as a ``{label: summary}`` dict in
+    ``MetricsRegistry.collect``.
+    """
+
+    __slots__ = ("label", "cap", "seed", "_hists")
+
+    def __init__(self, label: str = "label", cap: int = 8192, seed: int = 0x0B5E) -> None:
+        self.label = label
+        self.cap = cap
+        self.seed = seed
+        self._hists: dict = {}
+
+    def hist(self, key) -> BoundedHistogram:
+        h = self._hists.get(key)
+        if h is None:
+            h = BoundedHistogram(self.cap, seed=self.seed + 0x9E37 * len(self._hists))
+            self._hists[key] = h
+        return h
+
+    def observe(self, key, v) -> None:
+        self.hist(key).append(v)
+
+    def labels(self) -> list:
+        return list(self._hists)
+
+    def items(self):
+        return self._hists.items()
+
+    def __len__(self) -> int:
+        return len(self._hists)
+
+    def __contains__(self, key) -> bool:
+        return key in self._hists
+
+    def __getitem__(self, key) -> BoundedHistogram:
+        return self._hists[key]
+
+    def summary(self) -> dict:
+        return {str(k): h.summary() for k, h in self._hists.items()}
+
+
 class MetricsRegistry:
     """Named counters, gauges, histograms — one surface, many sources.
 
@@ -171,9 +221,17 @@ class MetricsRegistry:
             m = self._put(name, BoundedHistogram(cap, seed))
         return m
 
-    def attach(self, name: str, hist: BoundedHistogram) -> BoundedHistogram:
-        """Register an existing histogram (e.g. ``SchedulerMetrics.waits``)."""
+    def attach(self, name: str, hist):
+        """Register an existing ``BoundedHistogram`` (e.g.
+        ``SchedulerMetrics.waits``) or ``HistogramVector`` under ``name``."""
         return self._put(name, hist)
+
+    def histogram_vector(self, name: str, label: str = "label",
+                         cap: int = 8192, seed: int = 0x0B5E) -> HistogramVector:
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._put(name, HistogramVector(label, cap, seed))
+        return m
 
     def adopt(self, prefix: str, obj: Any, fields=None, props=()) -> None:
         """Register a legacy stats object's numeric surface as live views.
@@ -210,7 +268,7 @@ class MetricsRegistry:
         """Snapshot every metric as plain python values (JSON-safe)."""
         out: dict = {}
         for name, m in self._metrics.items():
-            if isinstance(m, BoundedHistogram):
+            if isinstance(m, (BoundedHistogram, HistogramVector)):
                 out[name] = m.summary()
             else:
                 out[name] = m.value
@@ -230,6 +288,15 @@ class MetricsRegistry:
                 lines.append(f'{pname}{{quantile="0.99"}} {m.percentile(99)}')
                 lines.append(f"{pname}_count {m.n}")
                 lines.append(f"{pname}_sum {m.total}")
+            elif isinstance(m, HistogramVector):
+                lines.append(f"# TYPE {pname} summary")
+                lab = _sanitize(m.label)
+                for key, h in sorted(m.items(), key=lambda e: str(e[0])):
+                    sel = f'{lab}="{key}"'
+                    lines.append(f'{pname}{{{sel},quantile="0.5"}} {h.percentile(50)}')
+                    lines.append(f'{pname}{{{sel},quantile="0.99"}} {h.percentile(99)}')
+                    lines.append(f'{pname}_count{{{sel}}} {h.n}')
+                    lines.append(f'{pname}_sum{{{sel}}} {h.total}')
             else:
                 v = m.value
                 if isinstance(v, dict):

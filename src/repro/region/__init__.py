@@ -1,0 +1,21 @@
+"""Region tier: fleets-of-fleets under the same CNA discipline.
+
+The recursion's third level — lock (PR 1), fleet of replicas (PR 4), and now
+a region of fleets, each fleet itself a federated ``ReplicaRouter`` over
+simulated replicas.  ``RegionRouter`` adds summaries-of-summaries routing,
+per-(tenant x fleet) fairness caps, and elastic fleet membership;
+``simulate_region`` replays ``repro.workload`` traces through any arm,
+deterministically.
+"""
+
+from .fairness import TenantFairness, TenantFairnessStats  # noqa: F401
+from .fleet import SimFleet  # noqa: F401
+from .router import RegionRouter, RegionStats  # noqa: F401
+from .sim import (  # noqa: F401
+    ARMS,
+    RegionResult,
+    RegionSession,
+    make_region_router,
+    simulate_region,
+    to_sessions,
+)

@@ -1,0 +1,131 @@
+"""Tenant-aware admission fairness: (tenant x fleet) pseudo-domains under
+the concurrency-restriction discipline.
+
+The GCR paper (arXiv 1905.10818, PR 2) restricts how many threads actively
+contend for a lock and parks the rest; ``RestrictedDiscipline`` implements
+that over any inner discipline.  Here the same machinery caps how many of a
+*tenant's* sessions may be in flight toward one *fleet* at once: each
+(tenant, fleet) pair is a pseudo-domain with its own
+``RestrictedDiscipline(FIFODiscipline(), max_active=cap)`` — up to ``cap``
+sessions proceed into the region CNA queue, the rest park in the
+discipline's passive set (bounded by ``park_bound``), and anything beyond
+that is rejected outright.  Rotation (``rotate_after``) keeps the parked set
+from ossifying, exactly as it keeps parked threads from starving at the
+lock.
+
+Why this bounds starvation (the property the tests pin): a session parks
+only while its pseudo-domain has ``cap`` sessions in flight, every
+completion releases exactly one parked session (FIFO within the tenant), and
+the park queue is bounded — so by Little's law a victim tenant's p99
+admission stall cannot exceed ~(park_bound / cap) service times, while the
+flooding tenant's *excess* volume is rejected instead of queued, never
+counted as stall.  The flood pays; the victims do not.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from repro.core.discipline import FIFODiscipline, RestrictedDiscipline
+
+
+@dataclass
+class TenantFairnessStats:
+    """Counters over every pseudo-domain (per-tenant splits live in the
+    region result's per-tenant histograms)."""
+
+    offered: int = 0
+    admitted: int = 0      # straight through (under cap)
+    parked: int = 0
+    unparked: int = 0
+    rejected: int = 0
+    max_parked: int = 0    # high-water mark of any one pseudo-domain's park
+
+    def register_into(self, registry, prefix: str = "tenant") -> None:
+        registry.adopt(prefix, self)
+
+
+class TenantFairness:
+    """Per-(tenant x fleet) concurrency caps over ``RestrictedDiscipline``.
+
+    ``offer(session, fleet)`` -> ``"admit" | "park" | "reject"``; the caller
+    queues admitted sessions, holds parked ones (they are inside the
+    pseudo-domain's discipline), and drops rejected ones.  ``release`` on a
+    session's completion frees its slot and returns the next parked session
+    of the same pseudo-domain, if any — the caller re-queues it.  Sessions
+    keep their original ``submit_t``, so parked time is admission stall, not
+    invisible."""
+
+    def __init__(self, *, cap: int = 4, park_bound: int = 8, rotate_after: int = 16) -> None:
+        if cap < 1:
+            raise ValueError("cap must be >= 1 (a zero cap admits nothing ever)")
+        if park_bound < 0:
+            raise ValueError("park_bound must be >= 0")
+        self.cap = cap
+        self.park_bound = park_bound
+        self.rotate_after = rotate_after
+        self.stats = TenantFairnessStats()
+        self._gov: dict[tuple, RestrictedDiscipline] = {}
+        self._inflight: dict[tuple, int] = {}
+        self._parked: dict[tuple, int] = {}
+
+    def _governor(self, key: tuple) -> RestrictedDiscipline:
+        g = self._gov.get(key)
+        if g is None:
+            g = RestrictedDiscipline(
+                FIFODiscipline(),
+                max_active=self.cap,
+                rotate_after=self.rotate_after,
+            )
+            self._gov[key] = g
+        return g
+
+    def inflight(self, tenant, fleet: int) -> int:
+        return self._inflight.get((tenant, fleet), 0)
+
+    def parked(self, tenant, fleet: int) -> int:
+        return self._parked.get((tenant, fleet), 0)
+
+    def offer(self, session, fleet: int) -> str:
+        """Gate ``session`` (which must carry ``.tenant``) toward ``fleet``."""
+        key = (session.tenant, fleet)
+        session.pseudo = key
+        self.stats.offered += 1
+        if self._inflight.get(key, 0) < self.cap:
+            self._inflight[key] = self._inflight.get(key, 0) + 1
+            self.stats.admitted += 1
+            return "admit"
+        if self._parked.get(key, 0) >= self.park_bound:
+            self.stats.rejected += 1
+            return "reject"
+        # park inside the pseudo-domain's restricted discipline: arrive()
+        # beyond the active cap goes passive (a Park event), and release()
+        # later grants in FIFO order with periodic rotation
+        g = self._governor(key)
+        g.arrive(session, 0)
+        self._parked[key] = self._parked.get(key, 0) + 1
+        self.stats.parked += 1
+        self.stats.max_parked = max(self.stats.max_parked, self._parked[key])
+        return "park"
+
+    def release(self, session):
+        """A gated session completed: free its pseudo-domain slot and pop
+        the next parked session of that pseudo-domain (or None).  The caller
+        owns re-queueing the returned session."""
+        key = getattr(session, "pseudo", None)
+        if key is None:
+            return None
+        self._inflight[key] = max(0, self._inflight.get(key, 0) - 1)
+        g = self._gov.get(key)
+        if g is None or self._parked.get(key, 0) <= 0:
+            return None
+        grant = g.release(0)  # one pseudo-domain per governor: domain is moot
+        if grant is None:
+            return None
+        self._parked[key] -= 1
+        self._inflight[key] += 1
+        self.stats.unparked += 1
+        return grant.item
+
+    def total_parked(self) -> int:
+        return sum(self._parked.values())

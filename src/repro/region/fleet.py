@@ -1,0 +1,176 @@
+"""A whole fleet behind the replica protocol: the region tier's "replica".
+
+``RegionRouter`` treats fleets exactly as ``ReplicaRouter`` treats replicas
+— the replica protocol (``capacity`` / ``occupancy`` / ``has_capacity`` /
+``admit`` / ``summary`` and the shipping hooks) is the recursion boundary.
+``SimFleet`` implements it by *composition*: inside each fleet sits a real
+``ReplicaRouter`` over real ``SimReplica``s, so a region run exercises the
+whole PR 4-8 stack per fleet (federated intra-fleet routing, GCR admission
+caps, priced intra-fleet shipping) while the region tier disciplines
+dispatch *across* fleets.
+
+Summaries-of-summaries: ``summary()`` merges the member replicas' hottest
+prefixes (freshest stamp first) into one fleet-level ``ReplicaSummary`` —
+the same compact shape the fleet federation ingests, re-advertised one level
+up.  The region federation therefore knows *which fleet* holds a prefix;
+which member replica serves it is the inner router's business.
+"""
+
+from __future__ import annotations
+
+from repro.core.topology import flat
+from repro.router.federation import ReplicaSummary
+from repro.router.router import ReplicaRouter, Session
+from repro.router.sim import SimReplica
+
+from repro.workload import output_tokens
+
+
+class SimFleet:
+    """One simulated fleet: ``n_replicas`` SimReplicas behind a federated
+    ``ReplicaRouter``, fronted as a single region-level replica.
+
+    ``admit`` runs the inner submit + dispatch synchronously — the region
+    tier's ``has_capacity`` gate guarantees some member replica has headroom,
+    so the inner CNA queue never holds a session across region ticks.
+    ``kv_ship`` enables *intra-fleet* shipping over a flat member topology
+    (the region fabric, with its inter-region ladder, is the
+    ``RegionRouter``'s — two pipes, two price books)."""
+
+    def __init__(
+        self,
+        fid: int,
+        n_replicas: int,
+        *,
+        n_slots: int = 4,
+        cache_budget: int = 600,
+        page_size: int = 1,
+        kv_ship=None,
+        seed: int = 0xF1EE7,
+        sync_every: int = 32,
+        top_k: int = 8,
+        tracer=None,
+    ) -> None:
+        self.fid = fid
+        self.members = [
+            SimReplica(r, n_slots, cache_budget=cache_budget, page_size=page_size)
+            for r in range(n_replicas)
+        ]
+        self.router = ReplicaRouter(
+            self.members,
+            topology=flat(n_replicas, f"fleet{fid}"),
+            seed=seed + 0x51 * fid,
+            sync_every=sync_every,
+            top_k=top_k,
+            kv_ship=kv_ship,
+            tracer=tracer,
+        )
+        self.served = 0
+        self.deposits = 0
+        self.deposit_tokens = 0
+
+    # -- replica protocol ------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return sum(m.capacity for m in self.members)
+
+    @property
+    def occupancy(self) -> int:
+        return sum(m.occupancy for m in self.members)
+
+    def has_capacity(self) -> bool:
+        r = self.router
+        return any(r._has_headroom(i) for i in range(len(self.members)))
+
+    def summary(self, top_k: int, now: int) -> ReplicaSummary:
+        """Summaries-of-summaries: the fleet's hottest prefixes across every
+        member, freshest stamp first, as one region-level advertisement."""
+        merged: list = []
+        for m in self.members:
+            merged.extend(m.cache.hottest(top_k))
+        merged.sort(key=lambda ts: -ts[1])
+        seen, out = set(), []
+        for tokens, stamp in merged:
+            if tokens in seen:
+                continue
+            seen.add(tokens)
+            out.append((tokens, stamp))
+            if len(out) >= top_k:
+                break
+        return ReplicaSummary(
+            replica=self.fid, t=now, occupancy=self.occupancy,
+            capacity=self.capacity, prefixes=tuple(out),
+        )
+
+    def admit(self, session: Session, now: int) -> int:
+        """Route ``session`` through the inner fleet and admit it there.
+
+        The region tier stamped ``session.ship`` with *its* decision; the
+        inner dispatch would overwrite it with the intra-fleet one, so both
+        are preserved: the region decision stays on ``session.ship`` (the
+        region event loop prices first-token waits from it) and the inner
+        one moves to ``session.inner_ship``."""
+        # the inner submit re-stamps the session's queue identity (submit_t,
+        # home, matched_len) as if it had just arrived at the fleet — but the
+        # session has been waiting in the *region* queue since submit_t, and
+        # stall accounting (region stats and the event loop's admission-stall
+        # histograms) is measured from there.  Preserve and restore.
+        region_submit_t = session.submit_t
+        region_home = session.home
+        region_matched = session.matched_len
+        region_ship = session.ship
+        if region_ship is not None and region_ship.executed:
+            # the session's own prefill starts no earlier than its region
+            # transfer completes (the region loop holds its first token until
+            # fabric_end), so the shipped bundle is legitimately deliverable
+            # now — and a sync makes the inner federation route to it
+            for m in self.members:
+                m._deliver(region_ship.fabric_end)
+            self.router.sync()
+        session.ship = None
+        self.router.advance(now)
+        session.fleet = self.fid
+        self.router.submit(session)
+        d = self.router.dispatch_one()
+        # region-level headroom gating makes the inner dispatch immediate;
+        # a None here means a member broke the has_capacity contract
+        assert d is not None and d[0] is session, "inner fleet failed to dispatch"
+        session.inner_ship, session.ship = session.ship, region_ship
+        session.submit_t = region_submit_t
+        session.home = region_home
+        session.matched_len = region_matched
+        self.served += 1
+        return session.local_matched
+
+    # -- KV shipping hooks (region fabric) -------------------------------------
+    def peek_match(self, prompt, now: int = 0) -> int:
+        """Longest cached run of ``prompt`` anywhere in the fleet."""
+        return max((m.peek_match(prompt, now) for m in self.members), default=0)
+
+    def export_kv(self, prompt):
+        """Export from the member holding the longest run."""
+        best = max(self.members, key=lambda m: m.cache.peek(prompt))
+        return best.export_kv(prompt)
+
+    def import_kv(self, tokens, payload, ready_t: int = 0) -> bool:
+        """Land a region-shipped bundle on the least-loaded member (the one
+        an inner cold route would pick), embargoed until ``ready_t``."""
+        target = min(self.members, key=lambda m: (m.occupancy, m.rid))
+        return target.import_kv(tokens, payload, ready_t=ready_t)
+
+    # -- completion ------------------------------------------------------------
+    def finish(self, session: Session, *, ttft: int | None = None,
+               deposit: bool = False) -> None:
+        """Retire ``session`` on its member replica; ``deposit=True`` models
+        the PR 5 retirement deposit — the session's prompt *plus its decode
+        output* enters the serving replica's cache, so a conversation
+        follow-up (whose prompt embeds exactly those output tokens — see
+        ``repro.workload.output_tokens``) re-prefills almost nothing."""
+        member = self.members[session.replica]
+        member.finish(session)
+        if deposit:
+            deposited = session.prompt + output_tokens(session.sid, session.decode_len)
+            charged = member.cache.insert(deposited)
+            self.deposits += 1
+            self.deposit_tokens += charged
+        self.router.complete(session, ttft=ttft)

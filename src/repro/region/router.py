@@ -1,0 +1,236 @@
+"""The region router: CNA-disciplined dispatch over fleets-of-fleets.
+
+PR 1 proved the paper's two-queue discipline at the lock, PR 4 at the fleet;
+this module is the third hierarchy level.  The mapping, at region
+granularity:
+
+  paper                      | region tier
+  ---------------------------+------------------------------------------
+  lock                       | the region dispatch pipe
+  thread                     | a queued session (with a tenant)
+  NUMA socket of a thread    | the session's *home fleet* — where the
+                             | region federation says its prefix is warm
+  socket of the lock holder  | the most recently dispatched fleet
+  main/secondary queues      | the same CNA queues via ``CNAScheduler``
+                             | over a ``core.topology.region`` topology
+                             | (fleets grouped into regions like sockets
+                             | into pods)
+
+Almost everything is *inherited*: ``RegionRouter`` subclasses
+``ReplicaRouter`` with fleets as its "replicas", so capacity gating,
+shed-before-stall, priced KV shipping (now over the inter-region fabric
+ladder — ``ShipCostModel.fabric_ladder``) and the GCR fleet controller all
+apply verbatim one level up.  What the region tier adds:
+
+  * **summaries-of-summaries** — the region ``FederatedPrefixIndex`` ingests
+    fleet-level summaries (each itself merged from member-replica summaries,
+    see ``repro.region.fleet``), with the same staleness degradation;
+  * **tenant fairness** — ``TenantFairness`` gates submission per
+    (tenant x fleet) pseudo-domain (``RestrictedDiscipline`` caps + bounded
+    park + reject), so one tenant's hot-prefix flood cannot starve the rest;
+  * **elastic membership** — ``attach_fleet`` / ``detach_fleet`` (driven by
+    ``repro.runtime.elastic.ElasticFleetSet``): a departure withdraws the
+    fleet's summary immediately and excludes it from candidates and from the
+    cold-route fallback, so routes issued mid-departure degrade to the
+    least-loaded live fleet — never a routing error.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.router.router import ReplicaRouter, Session
+
+from .fairness import TenantFairness
+
+
+@dataclass
+class RegionStats:
+    """Region-only counters (everything else lives on the inherited
+    ``RouterStats``)."""
+
+    tenant_parked: int = 0
+    tenant_unparked: int = 0
+    tenant_rejected: int = 0
+    detaches: int = 0
+    attaches: int = 0
+    rerouted_on_release: int = 0  # unparked sessions whose home fleet had left
+
+    def register_into(self, registry, prefix: str = "region") -> None:
+        registry.adopt(prefix, self)
+
+
+class RegionRouter(ReplicaRouter):
+    """``ReplicaRouter`` over fleets (see module docstring).
+
+    ``fleets`` implement the replica protocol (``repro.region.fleet.SimFleet``
+    in the simulator); ``topology`` should be a ``core.topology.region``
+    topology so the discipline's distance ladder separates sibling-fleet from
+    cross-region steering.  ``tenant_caps`` (an int) enables per-
+    (tenant x fleet) fairness with that cap; ``tenant_park_bound`` /
+    ``tenant_rotate_after`` tune the governor."""
+
+    def __init__(
+        self,
+        fleets,
+        *,
+        tenant_caps: int | None = None,
+        tenant_park_bound: int = 8,
+        tenant_rotate_after: int = 16,
+        **kwargs,
+    ) -> None:
+        super().__init__(fleets, **kwargs)
+        n = len(self.replicas)
+        self.active_fleets = [True] * n
+        self.tenants = (
+            TenantFairness(
+                cap=tenant_caps,
+                park_bound=tenant_park_bound,
+                rotate_after=tenant_rotate_after,
+            )
+            if tenant_caps is not None
+            else None
+        )
+        self.rstats = RegionStats()
+        # the cold-route fallback must never pick a detached fleet: report
+        # detached occupancy as effectively infinite so least-loaded always
+        # prefers a live one (only an all-detached region would pick it, and
+        # submit() guards that explicitly)
+        self.federation.occupancy = lambda: {
+            f: (self.replicas[f].occupancy if self.active_fleets[f] else 1 << 30)
+            for f in range(n)
+        }
+
+    # -- elastic membership ----------------------------------------------------
+    def detach_fleet(self, fleet: int) -> None:
+        """Remove ``fleet`` from service: withdraw its federated summary and
+        stop steering, shedding, or cold-routing to it.  Sessions already
+        admitted there drain normally (``complete`` still accounts them);
+        queued sessions homed there shed to live fleets at dispatch."""
+        if not self.active_fleets[fleet]:
+            return
+        self.active_fleets[fleet] = False
+        self.federation.withdraw(fleet)
+        self.rstats.detaches += 1
+        if self.tracer:
+            self.tracer.span("fleet_detach", -1, self.now, self.now, fleet=fleet)
+
+    def attach_fleet(self, fleet: int) -> None:
+        """Return ``fleet`` to service and re-advertise its summary in the
+        same call — no cold window between joining and attracting traffic."""
+        if self.active_fleets[fleet]:
+            return
+        self.active_fleets[fleet] = True
+        self.federation.apply(self.replicas[fleet].summary(self.top_k, self.now))
+        self.rstats.attaches += 1
+        if self.tracer:
+            self.tracer.span("fleet_attach", -1, self.now, self.now, fleet=fleet)
+
+    def sync(self) -> None:
+        """Pull fleet summaries — live fleets only (a detached fleet stopped
+        advertising the moment it left; re-applying its summary here would
+        reopen the routing window ``withdraw`` closed)."""
+        for fid, fleet in enumerate(self.replicas):
+            if self.active_fleets[fid]:
+                self.federation.apply(fleet.summary(self.top_k, self.now))
+        self.stats.syncs += 1
+        if self.fabric is not None:
+            if self.victim_cache:
+                self._drain_victims()
+            if self.prefetch:
+                self._prefetch()
+
+    def _has_headroom(self, r: int) -> bool:
+        return self.active_fleets[r] and super()._has_headroom(r)
+
+    def _nearest_active(self, home: int) -> int:
+        """Least-loaded live fleet, nearest to ``home`` first — the fallback
+        for homes that point at a detached fleet."""
+        live = [f for f in range(len(self.replicas)) if self.active_fleets[f]]
+        if not live:
+            raise RuntimeError("no active fleets in the region")
+        return min(
+            live,
+            key=lambda f: (self.topology.distance(home, f),
+                           self.replicas[f].occupancy, f),
+        )
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, session: Session) -> int | None:
+        """Home ``session`` via the region federation, gate it through tenant
+        fairness, and queue it under the CNA discipline.  Returns the home
+        fleet, or None when the tenant governor rejected it (flood overflow —
+        the caller must not expect a completion)."""
+        home, matched = self.federation.route(session.prompt, now=self.now)
+        if not self.active_fleets[home]:
+            # a route decided from summaries the same tick a fleet left:
+            # degrade to the nearest live fleet, never error
+            home = self._nearest_active(home)
+        session.home, session.matched_len = home, matched
+        session.submit_t = self.now
+        if self.tracer:
+            self.tracer.begin(
+                "session", session.sid, self.now,
+                prompt_len=len(session.prompt),
+                tenant=getattr(session, "tenant", None),
+                region=getattr(session, "region", None),
+            )
+            self.tracer.span(
+                "home_derivation", session.sid, self.now, self.now,
+                home=home, matched=matched,
+            )
+        if self.tenants is not None:
+            verdict = self.tenants.offer(session, home)
+            if verdict == "reject":
+                self.rstats.tenant_rejected += 1
+                if self.tracer:
+                    root = self.tracer.open_span(session.sid, "session")
+                    self.tracer.event(root, "tenant_reject", self.now, fleet=home)
+                    self.tracer.end(root, self.now)
+                return None
+            if verdict == "park":
+                self.rstats.tenant_parked += 1
+                if self.tracer:
+                    self.tracer.begin("tenant_park", session.sid, self.now, fleet=home)
+                return home
+        self.federation.note_steered(home)
+        self.scheduler.submit(session, home)
+        return home
+
+    def _enqueue_released(self, session: Session) -> None:
+        """Queue a just-unparked session (its slot was counted by the
+        governor at release).  Its home may have detached while it was
+        parked — re-route then, same degradation rule as submit."""
+        self.rstats.tenant_unparked += 1
+        if self.tracer:
+            sp = self.tracer.open_span(session.sid, "tenant_park")
+            if sp is not None:
+                self.tracer.end(sp, self.now)
+        if not self.active_fleets[session.home]:
+            session.home = self._nearest_active(session.home)
+            self.rstats.rerouted_on_release += 1
+        self.federation.note_steered(session.home)
+        self.scheduler.submit(session, session.home)
+
+    # -- completion ------------------------------------------------------------
+    def complete(self, session: Session, *, ttft: int | None = None) -> None:
+        """Report a session finished.  NB the inherited ``complete`` reads
+        ``session.replica``, which the *inner* fleet router overwrote with a
+        member-replica id at admit — the region tier accounts by
+        ``session.fleet`` instead.  A completion also pumps the tenant
+        governor: the freed (tenant x fleet) slot unparks the tenant's next
+        waiting session, which enters the CNA queue with its original
+        ``submit_t`` (parked time is admission stall, not amnesty)."""
+        session.finish_t = self.now
+        if self.tracer:
+            root = self.tracer.open_span(session.sid, "session")
+            self.tracer.event(root, "retire", self.now, fleet=session.fleet)
+            self.tracer.end(root, self.now)
+        fleet = getattr(session, "fleet", session.replica)
+        self.fleet.note_finish(fleet)
+        if ttft is not None:
+            self.fleet.observe_ttft(fleet, ttft)
+        if self.tenants is not None:
+            released = self.tenants.release(session)
+            if released is not None:
+                self._enqueue_released(released)

@@ -1,0 +1,361 @@
+"""Deterministic discrete-event simulator for the region tier.
+
+``repro.router.sim`` drives one fleet of replicas; this module drives a
+*region of fleets* with the same idiom — integer ticks, heapq event loop,
+explicit seeds — consuming ``repro.workload`` traces so every routing arm
+replays the identical request schedule (paired comparison).
+
+Per event-loop iteration: trace arrivals submit to the region router
+(federated ``RegionRouter`` or a region-oblivious baseline), the serialized
+region dispatch pipe drains while free, and each dispatch runs the *whole
+inner stack* — the target ``SimFleet``'s own federated ``ReplicaRouter``
+routes the session onto a member ``SimReplica``.  A session's first token
+waits for the max of its dispatch, its region-fabric transfer, and its
+intra-fleet transfer; retirement optionally deposits ``prompt + output``
+back into the serving replica's cache (the PR 5 retirement deposit), which
+is what makes conversation follow-ups cheap.
+
+Stall accounting is per tenant: ``RegionResult.tenant_stalls`` is a
+``repro.obs.HistogramVector`` keyed by tenant — the observable the tenant-
+fairness claims (no tenant's p99 admission stall beyond k x the fleet
+median) are stated over.
+"""
+
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+
+from repro.core.topology import region as region_topology
+from repro.obs import HistogramVector
+from repro.router.kvship import ShipCostModel
+from repro.router.router import Session
+from repro.router.sim import FleetCostModel, _BaselineRouter
+from repro.runtime.elastic import ElasticFleetSet
+from repro.workload import Trace
+
+from .fleet import SimFleet
+from .router import RegionRouter
+
+ARMS = ("region", "round_robin", "least_loaded")
+
+
+@dataclass
+class RegionSession(Session):
+    """A routed session carrying its workload identity.  ``fleet`` is where
+    it landed at region level (``replica`` is overwritten by the inner fleet
+    router with the member id); ``inner_ship`` the intra-fleet transfer
+    decision, if any."""
+
+    tenant: int = 0
+    region: int = 0
+    conv: int = 0
+    turn: int = 0
+    fleet: int | None = None
+    inner_ship: object = None
+    pseudo: tuple | None = None
+
+
+def to_sessions(trace: Trace) -> list[RegionSession]:
+    """Fresh mutable sessions for one arm's run — call once *per arm*
+    (routers mutate sessions); the schedule itself lives in the trace.
+    ``sid == rid`` so retirement deposits and follow-up prompts agree on
+    ``output_tokens``."""
+    return [
+        RegionSession(
+            sid=r.rid, prompt=r.prompt, decode_len=r.decode_len,
+            tenant=r.tenant, region=r.region, conv=r.conv, turn=r.turn,
+        )
+        for r in trace.requests
+    ]
+
+
+@dataclass
+class RegionResult:
+    """One region run's aggregates.  ``admission_stall_*`` run submit ->
+    first token (parked time included); the conservation law
+    ``sum(phase_cycles.values()) == admission_stall_total`` holds exactly
+    for served sessions."""
+
+    name: str
+    n_sessions: int = 0
+    served: int = 0
+    rejected: int = 0
+    ticks: int = 0
+    reprefill_tokens: int = 0
+    routed_tokens: int = 0
+    reuse_fraction: float = 0.0
+    hit_rate: float = 0.0
+    sheds: int = 0
+    dispatch_locality: float = 0.0
+    admission_stall_total: int = 0
+    admission_stall_p50: float = 0.0
+    admission_stall_p99: float = 0.0
+    per_fleet_served: list = field(default_factory=list)
+    ttfts: list = field(default_factory=list)
+    # tenant fairness
+    tenant_stalls: HistogramVector = field(
+        default_factory=lambda: HistogramVector("tenant")
+    )
+    tenant_parked: int = 0
+    tenant_unparked: int = 0
+    tenant_rejected: int = 0
+    rejected_by_tenant: dict = field(default_factory=dict)
+    # region-fabric shipping + intra-fleet shipping, separately
+    region_ships: int = 0
+    region_shipped_tokens: int = 0
+    region_ship_cycles: int = 0
+    intra_ships: int = 0
+    intra_shipped_tokens: int = 0
+    # retirement deposits
+    deposits: int = 0
+    deposit_tokens: int = 0
+    # elastic membership
+    detaches: int = 0
+    attaches: int = 0
+    phase_cycles: dict = field(default_factory=dict)
+
+    def tenant_p99(self) -> dict:
+        return {t: float(h.percentile(99)) for t, h in self.tenant_stalls.items()}
+
+    def headline(self) -> dict:
+        """The determinism-pinned summary: every number a bench publishes."""
+        return {
+            "served": self.served,
+            "rejected": self.rejected,
+            "ticks": self.ticks,
+            "reuse_fraction": round(self.reuse_fraction, 9),
+            "reprefill_tokens": self.reprefill_tokens,
+            "admission_stall_p50": self.admission_stall_p50,
+            "admission_stall_p99": self.admission_stall_p99,
+            "region_ships": self.region_ships,
+            "intra_ships": self.intra_ships,
+            "deposits": self.deposits,
+            "tenant_p99": {str(t): v for t, v in self.tenant_p99().items()},
+        }
+
+
+def make_region_router(
+    arm: str, fleets, *, topology, seed: int = 0xF1EE7, tracer=None, **kw
+):
+    """Build the region routing arm: ``region`` (CNA-disciplined, federated,
+    tenant-aware) or the region-oblivious ``round_robin`` / ``least_loaded``
+    controls over the *same* fleet objects."""
+    if arm == "region":
+        return RegionRouter(fleets, topology=topology, seed=seed, tracer=tracer, **kw)
+    if arm in ("round_robin", "least_loaded"):
+        return _BaselineRouter(fleets, policy=arm, topology=topology, tracer=tracer)
+    raise KeyError(f"unknown region arm {arm!r}; have {ARMS}")
+
+
+def simulate_region(
+    arm: str,
+    trace: Trace,
+    *,
+    fleets_per_region: int = 2,
+    replicas_per_fleet: int = 3,
+    n_slots: int = 4,
+    cache_budget: int = 600,
+    cm: FleetCostModel | None = None,
+    region_ship=None,
+    fleet_ship=None,
+    page_size: int | None = None,
+    tenant_caps: int | None = None,
+    tenant_park_bound: int = 8,
+    deposits: bool = True,
+    elastic=(),
+    max_age: int | None = None,
+    sync_every: int = 32,
+    seed: int = 42,
+    router_kwargs: dict | None = None,
+    tracer=None,
+    registry=None,
+) -> RegionResult:
+    """Run ``trace`` through a region of fleets under one routing arm.
+
+    ``region_ship`` prices region-fabric KV shipping (a ``ShipCostModel``,
+    or True for a default with an inter-region ladder ``(1, 1, 4)``);
+    ``fleet_ship`` likewise for each fleet's *internal* fabric.  Both are
+    region-arm concerns — the baselines never ship at region level (they
+    have no federation to discover holders with), but their inner fleets run
+    the identical stack.  ``tenant_caps`` enables (tenant x fleet) fairness
+    (region arm only).  ``elastic`` is a schedule of membership events
+    ``(t, "leave"|"join", fleet)`` driven through
+    ``repro.runtime.elastic.ElasticFleetSet``.  ``deposits`` toggles the
+    PR 5 retirement deposit (prompt + output re-enters the serving
+    replica's cache at finish)."""
+    cm = cm or FleetCostModel()
+    n_fleets = trace.n_regions * fleets_per_region
+    topo = region_topology(trace.n_regions, fleets_per_region)
+    router_kwargs = dict(router_kwargs or {})
+
+    scm = None
+    if region_ship:
+        if arm != "region":
+            raise ValueError("region_ship requires the region arm (federated discovery)")
+        from dataclasses import replace
+
+        scm = (
+            ShipCostModel(fabric_ladder=(1, 1, 4)) if region_ship is True else region_ship
+        )
+        scm = replace(scm, c_prefill=cm.c_prefill)
+        router_kwargs["kv_ship"] = scm
+    fcm = None
+    if fleet_ship:
+        from dataclasses import replace
+
+        fcm = ShipCostModel() if fleet_ship is True else fleet_ship
+        fcm = replace(fcm, c_prefill=cm.c_prefill)
+    ps = (
+        page_size
+        or getattr(scm, "page_size", 0)
+        or getattr(fcm, "page_size", 0)
+        or 1
+    )
+
+    fleets = [
+        SimFleet(
+            f, replicas_per_fleet, n_slots=n_slots, cache_budget=cache_budget,
+            page_size=ps, kv_ship=fcm, seed=seed, sync_every=sync_every,
+        )
+        for f in range(n_fleets)
+    ]
+    if arm == "region":
+        router_kwargs.setdefault("tenant_caps", tenant_caps)
+        router_kwargs.setdefault("tenant_park_bound", tenant_park_bound)
+        router_kwargs.setdefault("max_age", max_age)
+        router_kwargs.setdefault("sync_every", sync_every)
+    elif tenant_caps is not None:
+        raise ValueError("tenant_caps requires the region arm (the tenant governor)")
+    router = make_region_router(
+        arm, fleets, topology=topo, seed=seed, tracer=tracer, **router_kwargs
+    )
+    membership = ElasticFleetSet(router) if arm == "region" else None
+    if elastic and membership is None:
+        raise ValueError("elastic membership events require the region arm")
+
+    sessions = to_sessions(trace)
+    events: list[tuple[int, int, str, object]] = []
+    seq = 0
+
+    def push(t: int, kind: str, payload) -> None:
+        nonlocal seq
+        seq += 1
+        heapq.heappush(events, (t, seq, kind, payload))
+
+    for s, req in zip(sessions, trace.requests):
+        push(req.t, "arrive", s)
+    for t, op, fid in elastic:
+        push(int(t), "elastic", (op, int(fid)))
+
+    result = RegionResult(name=arm, n_sessions=len(sessions))
+    stalls: list[int] = []
+    phases = {"queue_wait": 0, "dispatch": 0, "ship_wait": 0, "prefill": 0}
+    busy_until = 0
+    last_t = 0
+    while events:
+        t, _, kind, payload = heapq.heappop(events)
+        last_t = t
+        router.advance(t)
+        if kind == "arrive":
+            if router.submit(payload) is None:
+                result.rejected += 1
+                tn = payload.tenant
+                result.rejected_by_tenant[tn] = result.rejected_by_tenant.get(tn, 0) + 1
+        elif kind == "elastic":
+            op, fid = payload
+            (membership.leave if op == "leave" else membership.join)(fid)
+        elif kind == "finish":
+            session, ttft = payload
+            fleets[session.fleet].finish(session, ttft=ttft, deposit=deposits)
+            router.complete(session, ttft=ttft)
+            result.ttfts.append(ttft)
+            result.served += 1
+        # drain the serialized region dispatch pipe
+        while busy_until <= t:
+            d = router.dispatch_one()
+            if d is None:
+                break
+            session, target, dist = d
+            cost = cm.c_dispatch + cm.c_steer * dist
+            start = t + cost
+            busy_until = start
+            uncached = len(session.prompt) - session.local_matched
+            prefill = cm.c_prefill * uncached
+            # first token waits for dispatch AND both fabrics (overlap: max)
+            ready = start
+            for ship in (session.ship, session.inner_ship):
+                if ship is not None and ship.executed:
+                    ready = max(ready, ship.fabric_end)
+            first_tok = ready + prefill
+            ttft = first_tok - session.dispatch_t
+            stall = first_tok - session.submit_t
+            stalls.append(stall)
+            result.tenant_stalls.observe(session.tenant, stall)
+            phases["queue_wait"] += t - session.submit_t
+            phases["dispatch"] += cost
+            phases["ship_wait"] += ready - start
+            phases["prefill"] += prefill
+            if tracer:
+                root = tracer.open_span(session.sid, "session")
+                sid = session.sid
+                tracer.span("phase.queue_wait", sid, session.submit_t, t,
+                            parent=root, cycles=t - session.submit_t)
+                tracer.span("phase.dispatch", sid, t, start, parent=root, cycles=cost)
+                tracer.span("phase.ship_wait", sid, start, ready,
+                            parent=root, cycles=ready - start)
+                tracer.span("phase.prefill", sid, ready, first_tok,
+                            parent=root, cycles=prefill, uncached=uncached)
+            finish_t = first_tok + cm.c_decode * session.decode_len
+            push(finish_t, "finish", (session, ttft))
+        if busy_until > t and len(router):
+            push(busy_until, "drain", None)
+
+    assert result.served + result.rejected == len(sessions), (
+        f"{result.served} served + {result.rejected} rejected "
+        f"!= {len(sessions)} submitted"
+    )
+    stats = router.stats
+    result.ticks = last_t
+    result.reprefill_tokens = stats.reprefill_tokens
+    result.routed_tokens = stats.routed_tokens
+    result.reuse_fraction = stats.reuse_fraction
+    result.hit_rate = stats.hit_rate
+    result.sheds = getattr(stats, "sheds", 0)
+    m = getattr(router, "metrics", None)
+    result.dispatch_locality = m.locality if m is not None else 0.0
+    adm = sorted(stalls)
+    if adm:
+        result.admission_stall_total = sum(adm)
+        result.admission_stall_p50 = float(adm[min(len(adm) - 1, int(0.50 * len(adm)))])
+        result.admission_stall_p99 = float(adm[min(len(adm) - 1, int(0.99 * len(adm)))])
+    result.per_fleet_served = [f.served for f in fleets]
+    rstats = getattr(router, "rstats", None)
+    if rstats is not None:
+        result.tenant_parked = rstats.tenant_parked
+        result.tenant_unparked = rstats.tenant_unparked
+        result.tenant_rejected = rstats.tenant_rejected
+        result.detaches = rstats.detaches
+        result.attaches = rstats.attaches
+    result.region_ships = getattr(stats, "ships", 0)
+    result.region_shipped_tokens = getattr(stats, "shipped_tokens", 0)
+    result.region_ship_cycles = getattr(stats, "ship_cycles", 0)
+    result.intra_ships = sum(f.router.stats.ships for f in fleets)
+    result.intra_shipped_tokens = sum(f.router.stats.shipped_tokens for f in fleets)
+    result.deposits = sum(f.deposits for f in fleets)
+    result.deposit_tokens = sum(f.deposit_tokens for f in fleets)
+    result.phase_cycles = phases
+    if registry is not None:
+        stats.register_into(registry, prefix=f"{arm}_region_router")
+        if m is not None:
+            m.register_into(registry, prefix=f"{arm}_region_sched")
+        if rstats is not None:
+            rstats.register_into(registry, prefix=f"{arm}_region")
+        tenants = getattr(router, "tenants", None)
+        if tenants is not None:
+            tenants.stats.register_into(registry, prefix=f"{arm}_tenant_gov")
+        registry.attach(f"{arm}_tenant_stall", result.tenant_stalls)
+        fabric = getattr(router, "fabric", None)
+        if fabric is not None:
+            fabric.stats.register_into(registry, prefix=f"{arm}_region_ship")
+    return result

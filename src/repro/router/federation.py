@@ -59,6 +59,7 @@ class FederationStats:
     rebuilds: int = 0
     applied: int = 0
     expired: int = 0           # summaries dropped for staleness (per rebuild)
+    withdrawn: int = 0         # summaries removed by elastic departure
 
     @property
     def hit_rate(self) -> float:
@@ -137,6 +138,21 @@ class FederatedPrefixIndex:
         self._steered[summary.replica] = 0
         self._version += 1
         self.stats.applied += 1
+
+    def withdraw(self, replica: int) -> bool:
+        """Remove ``replica``'s summary entirely — the elastic-departure
+        path.  Unlike staleness (which lets a silent replica age out after
+        ``max_age``), a withdrawal is immediate: the next rebuild excludes
+        the replica, so routes issued mid-departure degrade to the
+        least-loaded live replica instead of erroring.  Idempotent; returns
+        whether a summary was actually on file."""
+        if replica not in self._summaries:
+            return False
+        del self._summaries[replica]
+        self._steered.pop(replica, None)
+        self._version += 1
+        self.stats.withdrawn += 1
+        return True
 
     def _live_summaries(self, now: int) -> list[ReplicaSummary]:
         if self.max_age is None:

@@ -61,7 +61,14 @@ class ShipCostModel:
     target does **not** already hold cross the fabric — the target's
     ``local_matched`` run covers its first ``local_matched // page_size``
     pages, so a ship starts at that boundary instead of token 0, and
-    ``plan_ship`` can source disjoint page ranges from different holders."""
+    ``plan_ship`` can source disjoint page ranges from different holders.
+
+    ``fabric_ladder`` replaces the default linear distance scaling with an
+    explicit per-distance byte multiplier, indexed by ``Topology.distance``
+    (clamped to the last rung).  The region tier uses it to price the
+    intra-region vs inter-region fabric asymmetrically — e.g. ``(1, 1, 8)``
+    makes a cross-region hop 8x the bytes-cost of a sibling-fleet hop while
+    the page-granular accounting (which tokens cross at all) is untouched."""
 
     kv_bytes_per_token: int = 64
     fabric_bytes_per_cycle: int = 64
@@ -69,6 +76,7 @@ class ShipCostModel:
     c_prefill: int = 4
     min_ship_tokens: int = 4
     page_size: int = 0
+    fabric_ladder: tuple = ()
 
     def xfer_cycles(self, tokens: int, distance: int) -> int:
         """Fabric ticks to move ``tokens`` tokens of KV over ``distance``
@@ -76,8 +84,12 @@ class ShipCostModel:
         the ladder ``Topology.distance`` answers); setup included."""
         if tokens <= 0:
             return 0
-        nbytes = tokens * self.kv_bytes_per_token * max(1, distance)
-        return self.c_ship_setup + -(-nbytes // self.fabric_bytes_per_cycle)
+        if self.fabric_ladder:
+            scale = self.fabric_ladder[min(max(distance, 0), len(self.fabric_ladder) - 1)]
+        else:
+            scale = max(1, distance)
+        nbytes = tokens * self.kv_bytes_per_token * scale
+        return self.c_ship_setup + int(-(-nbytes // self.fabric_bytes_per_cycle))
 
 
 @dataclass

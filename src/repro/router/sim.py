@@ -460,6 +460,8 @@ def simulate(
     cm: FleetCostModel | None = None,
     inter_arrival: int = 16,
     seed: int = 42,
+    arrivals=None,
+    rng: random.Random | None = None,
     kv_ship=None,
     page_size: int | None = None,
     router_kwargs: dict | None = None,
@@ -480,6 +482,13 @@ def simulate(
     unshipped suffix.  The ship model's ``c_prefill`` is re-pinned to this
     run's ``cm.c_prefill`` so the argmin prices the machine that executes.
 
+    Randomness is seedable end-to-end: the *only* RNG in this module is the
+    run-scoped ``random.Random(seed)`` built here (audited — no module-level
+    random state anywhere in ``repro.router``), and callers may inject their
+    own via ``rng`` or bypass sampling entirely with ``arrivals`` — an
+    explicit per-session list of arrival ticks (e.g. a ``repro.workload``
+    trace schedule), so paired arms replay bit-identical schedules.
+
     ``tracer`` (a ``repro.obs.Tracer``, any arm): per-session causal spans
     plus the attribution layer — ``phase.queue_wait`` / ``phase.dispatch`` /
     ``phase.ship_wait`` / ``phase.prefill`` spans whose cycles sum *exactly*
@@ -487,7 +496,7 @@ def simulate(
     (a ``repro.obs.MetricsRegistry``): the run's stat surfaces register into
     it as live views.  Both default off and never perturb the run."""
     cm = cm or FleetCostModel()
-    rng = random.Random(seed)
+    rng = rng if rng is not None else random.Random(seed)
     router_kwargs = dict(router_kwargs or {})
     scm = None
     if kv_ship:
@@ -522,10 +531,18 @@ def simulate(
         seq += 1
         heapq.heappush(events, (t, seq, kind, payload))
 
-    t = 0
-    for s in sessions:
-        t += max(1, int(inter_arrival * rng.uniform(0.5, 1.5)))
-        push(t, "arrive", s)
+    if arrivals is not None:
+        if len(arrivals) != len(sessions):
+            raise ValueError(
+                f"arrivals gives {len(arrivals)} ticks for {len(sessions)} sessions"
+            )
+        for at, s in zip(arrivals, sessions):
+            push(int(at), "arrive", s)
+    else:
+        t = 0
+        for s in sessions:
+            t += max(1, int(inter_arrival * rng.uniform(0.5, 1.5)))
+            push(t, "arrive", s)
 
     busy_until = 0
     finished = 0

@@ -1,2 +1,2 @@
 from .fault import HeartbeatMonitor, StragglerDetector, WorkerFailure  # noqa: F401
-from .elastic import plan_mesh, ElasticTrainer  # noqa: F401
+from .elastic import ElasticFleetSet, ElasticTrainer, plan_mesh  # noqa: F401

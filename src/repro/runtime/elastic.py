@@ -10,17 +10,22 @@ tests: run -> (failure) -> plan_mesh over survivors -> restore checkpoint
 with the *new* shardings (CheckpointManager stores unsharded arrays, so this
 is one device_put per leaf) -> rescale the data loader (same global stream,
 new host partition) -> continue.
+
+``ElasticFleetSet`` is the same elasticity contract one level up, for the
+region tier (``repro.region``): whole fleets join and leave a
+``RegionRouter`` at runtime.  It is jax-free — the module's jax/training
+imports are lazy so the serving-side membership path works in the
+dependency-light smoke lane.  A departure *withdraws* the fleet's summary
+from the region federation immediately (no routing-error window: in-flight
+routes degrade to the least-loaded live fleet, never KeyError), and a join
+re-advertises a fresh summary in the same call so the rejoiner attracts
+traffic without waiting for the next periodic sync.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Sequence
-
-import jax
-
-from repro.models.sharding import use_mesh
-from repro.training.step import state_abstract, state_logical, tree_shardings
 
 
 def plan_mesh(n_devices: int, *, model_parallel: int, want_pods: int = 1):
@@ -37,6 +42,8 @@ def plan_mesh(n_devices: int, *, model_parallel: int, want_pods: int = 1):
 
 
 def make_mesh_from_plan(shape: Sequence[int], axes: Sequence[str], devices=None):
+    import jax
+
     devices = devices if devices is not None else jax.devices()
     n = 1
     for s in shape:
@@ -55,6 +62,9 @@ class ElasticTrainer:
 
     def restore_on(self, devices, *, want_pods: int = 1):
         """Restore the latest checkpoint onto a mesh built from ``devices``."""
+        from repro.models.sharding import use_mesh
+        from repro.training.step import state_abstract, state_logical, tree_shardings
+
         shape, axes = plan_mesh(len(devices), model_parallel=self.model_parallel, want_pods=want_pods)
         mesh = make_mesh_from_plan(shape, axes, devices)
         step = self.ckpt.latest_step()
@@ -65,3 +75,42 @@ class ElasticTrainer:
             shardings = tree_shardings(abs_state, state_logical(self.model))
             state, extra = self.ckpt.restore(step, abs_state, shardings=shardings, extra=True)
         return mesh, state, extra
+
+
+@dataclass
+class ElasticFleetSet:
+    """Fleet membership driver for the region tier (jax-free).
+
+    Wraps a ``repro.region.RegionRouter`` (any object with
+    ``attach_fleet``/``detach_fleet``/``active_fleets``) and narrates
+    membership changes through it, keeping an epoch counter and join/leave
+    telemetry so tests and benches can pin the no-error-window contract:
+    every ``leave`` is immediately routable-around, every ``join``
+    re-advertises before returning."""
+
+    router: object
+    epoch: int = 0
+    joins: int = 0
+    leaves: int = 0
+    log: list = field(default_factory=list)  # (epoch, "join"|"leave", fleet)
+
+    def leave(self, fleet: int) -> None:
+        """Detach ``fleet``: withdraw its federated summary and stop
+        steering/shedding to it.  Sessions already admitted there finish
+        normally; queued sessions homed there shed to live fleets."""
+        self.router.detach_fleet(fleet)
+        self.epoch += 1
+        self.leaves += 1
+        self.log.append((self.epoch, "leave", fleet))
+
+    def join(self, fleet: int) -> None:
+        """(Re-)attach ``fleet`` and re-advertise its summary in the same
+        call — a rejoiner attracts matched traffic without a cold window."""
+        self.router.attach_fleet(fleet)
+        self.epoch += 1
+        self.joins += 1
+        self.log.append((self.epoch, "join", fleet))
+
+    @property
+    def active(self) -> list[int]:
+        return [f for f, a in enumerate(self.router.active_fleets) if a]

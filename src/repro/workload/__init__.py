@@ -1,0 +1,29 @@
+"""Trace-style workload engine: deterministic multi-tenant request schedules
+(per-tenant Zipf prefix mixes, phase-shifted diurnal waves, conversation
+follow-ups, regional skew) that replay identically to every routing arm.
+See ``repro.workload.trace`` for the model; ``repro.region`` consumes the
+traces."""
+
+from .trace import (  # noqa: F401
+    DiurnalWave,
+    TenantProfile,
+    Trace,
+    TraceGenerator,
+    TraceRequest,
+    output_tokens,
+    prefix_tokens,
+    uniform_tenants,
+    with_flood,
+)
+
+__all__ = [
+    "DiurnalWave",
+    "TenantProfile",
+    "Trace",
+    "TraceGenerator",
+    "TraceRequest",
+    "output_tokens",
+    "prefix_tokens",
+    "uniform_tenants",
+    "with_flood",
+]

@@ -1,0 +1,296 @@
+"""Deterministic trace-style workload generator for the region tier.
+
+The benches so far drove routers with synthetic session lists drawn from one
+Zipf; a region of fleets needs the traffic shape that actually stresses the
+third hierarchy level:
+
+  * **millions of simulated users** — user ids are drawn from a large space
+    (``user_space``, default 10M); what matters is that per-request state
+    cannot be keyed per-user, only per-tenant prefix pools stay warm;
+  * **per-tenant Zipf prefix mixes** — each ``TenantProfile`` owns a private
+    pool of prompt templates ("system prompts") and draws from it with its
+    own skew, so tenants have disjoint working sets and a router that mixes
+    them across fleets thrashes every fleet's KV budget;
+  * **diurnal arrival waves, phase-shifted per region** — arrival intensity
+    follows a sinusoid over ``DiurnalWave.period`` ticks, with region ``r``'s
+    peak shifted by ``r / n_regions`` of a period (the sun moves), so fleet
+    load is never uniform and the region tier always has a busy side;
+  * **conversation follow-ups** — a request spawns later turns with
+    probability ``followup_p``; the child prompt is the parent prompt plus
+    the parent's (deterministic) output tokens plus a fresh user suffix, the
+    exact shape the serving engine's retirement deposits (PR 5) make cheap:
+    a fleet that deposited ``prompt + output`` at retirement serves the
+    follow-up's re-prefill almost for free;
+  * **regional skew** — each tenant has a home region where its traffic
+    concentrates (``home_bias``); conversations stay in the region they
+    started in.
+
+Everything is driven by explicit ``random.Random`` instances derived from
+one seed — no module-level RNG, no wall clock — so ``generate()`` is a pure
+function of its arguments and the *same* ``Trace`` object replays the same
+schedule to every routing arm (paired comparisons; see
+``benchmarks/region_bench.py``).
+
+``output_tokens(rid, n)`` is the one shared convention: the generator builds
+follow-up prompts from it, and the region simulator deposits exactly those
+tokens at session retirement — so a deposit-on arm's caches hold precisely
+what the next turn's prompt re-uses.
+"""
+
+from __future__ import annotations
+
+import bisect
+import math
+import random
+from dataclasses import dataclass, replace
+
+
+def output_tokens(rid: int, n: int) -> tuple:
+    """The deterministic decode output of request ``rid`` (``n`` tokens).
+
+    Shared between the generator (follow-up prompts embed the parent's
+    output) and the region simulator (retirement deposits insert it), so the
+    two sides agree bit-for-bit without any channel between them."""
+    return tuple(800_000_000 + rid * 1_009 + j for j in range(n))
+
+
+def prefix_tokens(tenant: int, pid: int, n: int) -> tuple:
+    """Template ``pid`` of ``tenant``'s prompt pool — tenant-namespaced so
+    pools never collide across tenants."""
+    base = 1_000_000 * (tenant + 1) + 1_000 * pid
+    return tuple(base + j for j in range(n))
+
+
+@dataclass(frozen=True)
+class TenantProfile:
+    """One tenant's traffic shape.  ``weight`` is its share of arrivals
+    (before regional bias), ``n_prefixes``/``prefix_skew`` its private Zipf
+    prompt-template mix, ``home_region``/``home_bias`` the regional skew
+    (bias multiplies its weight in the home region), ``followup_p`` the
+    per-turn probability a conversation continues."""
+
+    tenant: int
+    weight: float = 1.0
+    n_prefixes: int = 8
+    prefix_skew: float = 0.9
+    prefix_len: int = 64
+    suffix_len: int = 12
+    decode_len: int = 16
+    home_region: int = 0
+    home_bias: float = 4.0
+    followup_p: float = 0.0
+    think_time: int = 200      # mean ticks between a reply and the next turn
+
+
+@dataclass(frozen=True)
+class DiurnalWave:
+    """Sinusoidal arrival intensity: rate(t) = base * (1 + amplitude *
+    sin(2pi * (t/period - phase))), phase = region / n_regions."""
+
+    period: int = 2048
+    amplitude: float = 0.8
+
+
+@dataclass(frozen=True)
+class TraceRequest:
+    """One scheduled request.  ``t`` is the arrival tick; ``conv`` names the
+    conversation (the opener's ``rid``), ``turn`` its position in it, and
+    ``parent`` the previous turn's ``rid`` (None for openers)."""
+
+    rid: int
+    t: int
+    tenant: int
+    user: int
+    region: int
+    prompt: tuple
+    decode_len: int
+    conv: int
+    turn: int = 0
+    parent: int | None = None
+
+
+@dataclass(frozen=True)
+class Trace:
+    """An immutable, fully materialized request schedule (time-sorted)."""
+
+    requests: tuple
+    n_regions: int
+    seed: int
+    horizon: int
+
+    def __len__(self) -> int:
+        return len(self.requests)
+
+    def tenants(self) -> list[int]:
+        return sorted({r.tenant for r in self.requests})
+
+    def arrivals_by_region(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {r: [] for r in range(self.n_regions)}
+        for req in self.requests:
+            out[req.region].append(req.t)
+        return out
+
+
+class _Zipf:
+    """Inverse-CDF Zipf sampler over ``n`` items (rank-1 hottest)."""
+
+    def __init__(self, n: int, skew: float) -> None:
+        w = [1.0 / (k + 1) ** skew for k in range(n)]
+        tot = sum(w)
+        acc, self._cdf = 0.0, []
+        for x in w:
+            acc += x / tot
+            self._cdf.append(acc)
+
+    def draw(self, rng: random.Random) -> int:
+        # clamp: fp rounding can leave cdf[-1] a hair under 1.0
+        return min(bisect.bisect_left(self._cdf, rng.random()), len(self._cdf) - 1)
+
+
+class TraceGenerator:
+    """Seeded diurnal multi-tenant trace generator (see module docstring).
+
+    ``base_rate`` is mean arrivals per tick per region at wave midline; the
+    per-region arrival streams are sampled by thinning a homogeneous Poisson
+    process at the wave's peak rate, each from its own ``random.Random``
+    derived from (seed, region) — so adding a region, or re-ordering the
+    tenant list, never perturbs another region's stream."""
+
+    def __init__(
+        self,
+        *,
+        n_regions: int,
+        tenants,
+        seed: int = 0,
+        wave: DiurnalWave | None = None,
+        base_rate: float = 0.04,
+        user_space: int = 10_000_000,
+        service_estimate: int = 150,
+    ) -> None:
+        if n_regions < 1:
+            raise ValueError("need at least one region")
+        self.n_regions = n_regions
+        self.tenants = tuple(tenants)
+        if not self.tenants:
+            raise ValueError("need at least one tenant profile")
+        for p in self.tenants:
+            if not 0 <= p.home_region < n_regions:
+                raise ValueError(
+                    f"tenant {p.tenant} homed in region {p.home_region}, "
+                    f"but the trace has {n_regions} regions"
+                )
+        self.seed = seed
+        self.wave = wave or DiurnalWave()
+        self.base_rate = base_rate
+        self.user_space = user_space
+        self.service_estimate = service_estimate
+        self._zipf = {p.tenant: _Zipf(p.n_prefixes, p.prefix_skew) for p in self.tenants}
+
+    def rate(self, region: int, t: int) -> float:
+        """Instantaneous arrival intensity of ``region`` at tick ``t``."""
+        w = self.wave
+        phase = region / self.n_regions
+        return self.base_rate * (
+            1.0 + w.amplitude * math.sin(2.0 * math.pi * (t / w.period - phase))
+        )
+
+    def _tenant_weights(self, region: int) -> tuple[list[float], list[TenantProfile]]:
+        profs = list(self.tenants)
+        weights = [
+            p.weight * (p.home_bias if p.home_region == region else 1.0) for p in profs
+        ]
+        return weights, profs
+
+    def generate(self, horizon: int) -> Trace:
+        """Materialize the schedule over ``[0, horizon)`` ticks (follow-up
+        turns may land past the horizon; they are kept — a conversation that
+        started inside the window finishes)."""
+        reqs: list[TraceRequest] = []
+        rid = 0
+        peak = self.base_rate * (1.0 + self.wave.amplitude)
+        for region in range(self.n_regions):
+            rng = random.Random((self.seed << 8) ^ (0xA11CE + region))
+            weights, profs = self._tenant_weights(region)
+            t = 0.0
+            while True:
+                t += rng.expovariate(peak) if peak > 0 else horizon
+                if t >= horizon:
+                    break
+                # thinning: accept with prob rate(t)/peak -> inhomogeneous
+                # Poisson with the region's phase-shifted diurnal intensity
+                if rng.random() * peak > self.rate(region, int(t)):
+                    continue
+                p = rng.choices(profs, weights=weights, k=1)[0]
+                user = rng.randrange(self.user_space)
+                pid = self._zipf[p.tenant].draw(rng)
+                prompt = prefix_tokens(p.tenant, pid, p.prefix_len) + tuple(
+                    500_000_000 + rid * 1_009 + j for j in range(p.suffix_len)
+                )
+                conv = rid
+                reqs.append(
+                    TraceRequest(
+                        rid=rid, t=int(t), tenant=p.tenant, user=user,
+                        region=region, prompt=prompt, decode_len=p.decode_len,
+                        conv=conv,
+                    )
+                )
+                rid += 1
+                # conversation chain: geometric number of follow-up turns,
+                # each thinking after the previous turn's estimated reply
+                cur_prompt, cur_t, parent, turn = prompt, t, conv, 1
+                while p.followup_p > 0 and rng.random() < p.followup_p:
+                    cur_t += self.service_estimate + rng.expovariate(
+                        1.0 / max(1, p.think_time)
+                    )
+                    cur_prompt = (
+                        cur_prompt
+                        + output_tokens(parent, p.decode_len)
+                        + tuple(500_000_000 + rid * 1_009 + j for j in range(p.suffix_len))
+                    )
+                    reqs.append(
+                        TraceRequest(
+                            rid=rid, t=int(cur_t), tenant=p.tenant, user=user,
+                            region=region, prompt=cur_prompt,
+                            decode_len=p.decode_len, conv=conv, turn=turn,
+                            parent=parent,
+                        )
+                    )
+                    parent = rid
+                    rid += 1
+                    turn += 1
+        reqs.sort(key=lambda r: (r.t, r.rid))
+        return Trace(
+            requests=tuple(reqs), n_regions=self.n_regions,
+            seed=self.seed, horizon=horizon,
+        )
+
+
+def uniform_tenants(
+    n_tenants: int,
+    n_regions: int,
+    *,
+    followup_p: float = 0.0,
+    **overrides,
+) -> list[TenantProfile]:
+    """Equal-weight tenants homed round-robin over regions — the baseline
+    multi-tenant mix benches start from.  ``overrides`` apply to every
+    profile (e.g. ``prefix_len=96``)."""
+    return [
+        TenantProfile(
+            tenant=i, home_region=i % n_regions, followup_p=followup_p, **overrides
+        )
+        for i in range(n_tenants)
+    ]
+
+
+def with_flood(tenants, *, tenant: int = 0, weight: float = 30.0,
+               n_prefixes: int = 1) -> list[TenantProfile]:
+    """Turn one tenant into an adversarial hot-prefix flood: its weight
+    swamps the mix and its whole volume lands on a single prompt template —
+    the scenario tenant fairness caps exist for."""
+    out = []
+    for p in tenants:
+        if p.tenant == tenant:
+            p = replace(p, weight=weight, n_prefixes=n_prefixes)
+        out.append(p)
+    return out

@@ -1,0 +1,304 @@
+"""repro.region: fleets-of-fleets under the CNA discipline — paired-arm
+simulation invariants, elastic membership (no routing-error window), tenant
+fairness (bounded starvation under an adversarial flood), and retirement
+deposits serving conversation follow-ups."""
+
+import statistics
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.topology import region as region_topology
+from repro.region import (
+    RegionRouter,
+    RegionSession,
+    SimFleet,
+    TenantFairness,
+    simulate_region,
+    to_sessions,
+)
+from repro.router.federation import FederatedPrefixIndex, ReplicaSummary
+from repro.workload import TraceGenerator, uniform_tenants, with_flood
+
+
+def _trace(seed=7, horizon=2048, rate=0.03, tenants=None, n_regions=2):
+    gen = TraceGenerator(
+        n_regions=n_regions,
+        tenants=tenants or uniform_tenants(4, n_regions),
+        seed=seed,
+        base_rate=rate,
+    )
+    return gen.generate(horizon=horizon)
+
+
+def _fleets(n=4, replicas=2, slots=2, **kw):
+    return [SimFleet(f, replicas, n_slots=slots, **kw) for f in range(n)]
+
+
+def _router(fleets, regions=2, **kw):
+    per = len(fleets) // regions
+    return RegionRouter(fleets, topology=region_topology(regions, per), **kw)
+
+
+# -- topology ------------------------------------------------------------------
+
+
+def test_region_topology_three_levels():
+    t = region_topology(2, 3)
+    assert t.n_domains == 6
+    assert t.distance(0, 0) == 0
+    assert t.distance(0, 1) == 1   # sibling fleet, same region
+    assert t.distance(0, 3) == 2   # cross-region
+
+
+# -- simulation invariants -----------------------------------------------------
+
+
+def test_all_arms_conserve_sessions():
+    tr = _trace()
+    for arm in ("region", "least_loaded", "round_robin"):
+        r = simulate_region(arm, tr, seed=11)
+        assert r.served + r.rejected == len(tr)
+        assert r.rejected == 0  # no caps -> nothing rejected
+        assert sum(r.per_fleet_served) == r.served
+
+
+def test_phase_conservation():
+    """queue_wait + dispatch + ship_wait + prefill == total admission stall,
+    exactly — the causal attribution invariant one level up."""
+    r = simulate_region("region", _trace(), seed=11)
+    assert sum(r.phase_cycles.values()) == r.admission_stall_total
+
+
+def test_region_arm_beats_oblivious_on_reuse():
+    tr = _trace(seed=7, horizon=4096, rate=0.02)
+    region = simulate_region("region", tr, seed=11)
+    base = simulate_region("least_loaded", tr, seed=11)
+    assert region.reuse_fraction > base.reuse_fraction
+    assert region.reprefill_tokens < base.reprefill_tokens
+
+
+def test_simulate_region_is_deterministic():
+    tr = _trace()
+    a = simulate_region("region", tr, seed=5, tenant_caps=3)
+    b = simulate_region("region", tr, seed=5, tenant_caps=3)
+    assert a.headline() == b.headline()
+    assert a.ttfts == b.ttfts
+
+
+def test_fleet_admit_preserves_region_queue_identity():
+    """Regression: the inner fleet router re-stamps submit_t/home/matched_len
+    on submit; SimFleet.admit must restore the region-level values or all
+    queueing time silently vanishes from stall accounting."""
+    f = SimFleet(0, 2, n_slots=2)
+    s = RegionSession(sid=1, prompt=tuple(range(100, 140)))
+    s.submit_t, s.home, s.matched_len = 17, 0, 5
+    f.admit(s, now=50)
+    assert s.submit_t == 17
+    assert s.home == 0
+    assert s.matched_len == 5
+    assert s.fleet == 0
+    assert s.replica in (0, 1)  # inner member id, not the fleet id
+
+
+def test_tenant_caps_require_region_arm():
+    with pytest.raises(ValueError):
+        simulate_region("least_loaded", _trace(), tenant_caps=2)
+    with pytest.raises(ValueError):
+        simulate_region("least_loaded", _trace(), elastic=[(10, "leave", 0)])
+
+
+# -- elastic membership --------------------------------------------------------
+
+
+def test_withdraw_removes_summary_and_bumps_version():
+    fed = FederatedPrefixIndex(2, occupancy=lambda: {0: 0, 1: 0})
+    fed.apply(ReplicaSummary(replica=1, t=0, occupancy=0, capacity=4,
+                             prefixes=(((1, 2, 3), 1),)))
+    assert fed.route([1, 2, 3])[0] == 1
+    assert fed.withdraw(1)
+    assert fed.stats.withdrawn == 1
+    assert not fed.withdraw(1)  # idempotent: already gone
+    # the prefix no longer matches anywhere; cold fallback, no error
+    replica, matched = fed.route([1, 2, 3])
+    assert matched == 0
+
+
+def test_route_issued_mid_departure_degrades_never_errors():
+    """The ISSUE regression: a session whose home fleet departs between
+    route derivation and dispatch must degrade to a live fleet."""
+    fleets = _fleets()
+    router = _router(fleets)
+    # warm fleet 1 so routes home there
+    warm = RegionSession(sid=1, prompt=tuple(range(500, 540)))
+    router.submit(warm)
+    warm_home = warm.home
+    router.dispatch_one()
+    fleets[warm.fleet].finish(warm, deposit=True)
+    router.complete(warm)
+    router.sync()
+    probe = RegionSession(sid=2, prompt=tuple(range(500, 540)))
+    # departure happens before the probe's submit reads the summaries
+    router.detach_fleet(warm_home)
+    home = router.submit(probe)
+    assert home is not None and home != warm_home
+    assert router.active_fleets[home]
+    d = router.dispatch_one()
+    assert d is not None and d[0] is probe
+    assert probe.fleet != warm_home
+
+
+def test_parked_session_reroutes_when_home_departs():
+    """A session parked by the tenant governor holds a home; if that fleet
+    leaves while it waits, its release must re-route it live."""
+    fleets = _fleets()
+    router = _router(fleets, tenant_caps=1, tenant_park_bound=4)
+    # warm one fleet so both tenant-3 sessions below route to the same home
+    warm = RegionSession(sid=0, prompt=tuple(range(900, 940)), tenant=1)
+    router.submit(warm)
+    router.dispatch_one()
+    fleets[warm.fleet].finish(warm, deposit=True)
+    router.complete(warm)
+    router.sync()
+    first = RegionSession(sid=1, prompt=tuple(range(900, 940)), tenant=3)
+    assert router.submit(first) is not None
+    router.dispatch_one()
+    home = first.home
+    parked = RegionSession(sid=2, prompt=tuple(range(900, 940)), tenant=3)
+    assert router.submit(parked) == home  # over cap -> parked toward home
+    assert router.rstats.tenant_parked == 1
+    router.detach_fleet(home)
+    fleets[first.fleet].finish(first)
+    router.complete(first)  # frees the slot -> unparks `parked`, re-routed
+    assert router.rstats.tenant_unparked == 1
+    assert router.rstats.rerouted_on_release == 1
+    assert parked.home != home
+    d = router.dispatch_one()
+    assert d is not None and d[0] is parked
+
+
+def test_all_fleets_detached_is_explicit_error():
+    router = _router(_fleets())
+    for f in range(4):
+        router.detach_fleet(f)
+    with pytest.raises(RuntimeError):
+        router.submit(RegionSession(sid=1, prompt=(1, 2, 3)))
+
+
+def test_attach_readvertises_immediately():
+    fleets = _fleets()
+    router = _router(fleets)
+    s = RegionSession(sid=1, prompt=tuple(range(300, 340)))
+    router.submit(s)
+    router.dispatch_one()
+    fleets[s.fleet].finish(s, deposit=True)
+    router.complete(s)
+    router.sync()
+    held_by = s.fleet
+    router.detach_fleet(held_by)
+    router.attach_fleet(held_by)
+    # no cold window: the re-applied summary routes the same prefix home
+    probe = RegionSession(sid=2, prompt=tuple(range(300, 340)))
+    assert router.submit(probe) == held_by
+
+
+def test_elastic_schedule_in_simulation():
+    tr = _trace(rate=0.05)
+    r = simulate_region(
+        "region", tr, seed=5,
+        elastic=[(500, "leave", 1), (1400, "join", 1)],
+    )
+    assert r.detaches == 1 and r.attaches == 1
+    assert r.served + r.rejected == len(tr)
+    # fleet 1 served strictly less than its mirror fleet in the other region
+    assert r.per_fleet_served[1] < max(r.per_fleet_served)
+
+
+# -- tenant fairness -----------------------------------------------------------
+
+
+def test_tenant_fairness_unit_admit_park_reject():
+    tf = TenantFairness(cap=2, park_bound=2)
+    sessions = [RegionSession(sid=i, prompt=(1,), tenant=0) for i in range(6)]
+    verdicts = [tf.offer(s, fleet=0) for s in sessions[:5]]
+    assert verdicts == ["admit", "admit", "park", "park", "reject"]
+    assert tf.inflight(0, 0) == 2 and tf.parked(0, 0) == 2
+    # releasing an admitted session unparks FIFO: sid 2 first
+    released = tf.release(sessions[0])
+    assert released is sessions[2]
+    assert tf.inflight(0, 0) == 2 and tf.parked(0, 0) == 1
+    # other pseudo-domains are independent
+    assert tf.offer(sessions[5], fleet=1) == "admit"
+
+
+def test_tenant_fairness_rejects_bad_config():
+    with pytest.raises(ValueError):
+        TenantFairness(cap=0)
+    with pytest.raises(ValueError):
+        TenantFairness(park_bound=-1)
+
+
+def test_starvation_freedom_under_flood():
+    """With caps on, every admitted-or-parked session completes (rejections
+    are explicit), no session is left parked at drain, and only the flooding
+    tenant is rejected."""
+    tr = _trace(
+        seed=3, horizon=2000, rate=0.12,
+        tenants=with_flood(uniform_tenants(5, 2, suffix_len=24), weight=30.0),
+    )
+    r = simulate_region(
+        "region", tr, seed=5, tenant_caps=3, tenant_park_bound=12,
+        fleets_per_region=2, replicas_per_fleet=2, n_slots=2,
+    )
+    assert r.served + r.rejected == len(tr)
+    assert r.tenant_parked == r.tenant_unparked  # everyone parked got out
+    assert r.rejected_by_tenant.get(0, 0) == r.rejected  # flood pays, alone
+    # every non-flood tenant still made progress
+    for t in (1, 2, 3, 4):
+        assert t in r.tenant_stalls
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       weight=st.floats(min_value=20.0, max_value=60.0))
+def test_property_caps_bound_victim_stall(seed, weight):
+    """Adversarial single-tenant hot-prefix flood, any seed/intensity: with
+    caps on, no victim tenant's p99 admission stall exceeds k x the fleet
+    median (floored, so an idle-fleet median of ~0 cannot fabricate a
+    violation)."""
+    tr = _trace(
+        seed=seed, horizon=1600, rate=0.12,
+        tenants=with_flood(uniform_tenants(5, 2, suffix_len=24), weight=weight),
+    )
+    r = simulate_region(
+        "region", tr, seed=5, tenant_caps=3, tenant_park_bound=12,
+        fleets_per_region=2, replicas_per_fleet=2, n_slots=2,
+    )
+    p99 = r.tenant_p99()
+    victims = {t: v for t, v in p99.items() if t != 0}
+    if not victims:
+        return
+    med = statistics.median(p99.values())
+    k, floor = 3.0, 500.0
+    bound = k * max(med, floor)
+    assert max(victims.values()) <= bound, (victims, med)
+
+
+# -- retirement deposits -------------------------------------------------------
+
+
+def test_deposits_cut_followup_reprefill():
+    gen = TraceGenerator(
+        n_regions=2,
+        tenants=uniform_tenants(4, 2, followup_p=0.6, decode_len=24),
+        seed=9, base_rate=0.02,
+    )
+    tr = gen.generate(horizon=4096)
+    on = simulate_region("region", tr, seed=5, cache_budget=2000, deposits=True)
+    off = simulate_region("region", tr, seed=5, cache_budget=2000, deposits=False)
+    assert on.deposits == on.served and off.deposits == 0
+    assert on.reprefill_tokens < off.reprefill_tokens

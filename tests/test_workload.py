@@ -1,0 +1,177 @@
+"""repro.workload: the trace generator's contracts — bit-determinism from
+the seed, follow-up prompts that embed the parent's deterministic output
+(the shape retirement deposits serve), phase-shifted diurnal waves, and
+regional/tenant skew."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.workload import (
+    DiurnalWave,
+    TenantProfile,
+    TraceGenerator,
+    output_tokens,
+    prefix_tokens,
+    uniform_tenants,
+    with_flood,
+)
+
+
+def _gen(**kw):
+    args = dict(n_regions=2, tenants=uniform_tenants(4, 2), seed=7, base_rate=0.03)
+    args.update(kw)
+    return TraceGenerator(**args)
+
+
+# -- determinism ---------------------------------------------------------------
+
+
+def test_same_seed_same_trace():
+    a = _gen().generate(horizon=2048)
+    b = _gen().generate(horizon=2048)
+    assert a.requests == b.requests
+
+
+def test_different_seed_different_trace():
+    a = _gen(seed=7).generate(horizon=2048)
+    b = _gen(seed=8).generate(horizon=2048)
+    assert a.requests != b.requests
+
+
+def test_regions_independent_streams():
+    """Adding a region must not perturb existing regions' schedules — each
+    region draws from its own (seed, region)-derived RNG."""
+    two = _gen(n_regions=2, tenants=uniform_tenants(4, 2)).generate(horizon=2048)
+    three = _gen(n_regions=3, tenants=uniform_tenants(4, 3)).generate(horizon=2048)
+    # tenant homes shift with n_regions, which changes weights; compare the
+    # pure arrival-time skeleton of region 0 with identical tenant homes
+    t2 = _gen(n_regions=2, tenants=uniform_tenants(4, 1)).generate(horizon=2048)
+    t3 = _gen(n_regions=3, tenants=uniform_tenants(4, 1)).generate(horizon=2048)
+    assert [r.t for r in t2.requests if r.region == 0] == [
+        r.t for r in t3.requests if r.region == 0
+    ]
+    assert len(two) > 0 and len(three) > 0
+
+
+# -- structure -----------------------------------------------------------------
+
+
+def test_rids_unique_and_time_sorted():
+    tr = _gen().generate(horizon=2048)
+    rids = [r.rid for r in tr.requests]
+    assert len(set(rids)) == len(rids)
+    ts = [r.t for r in tr.requests]
+    assert ts == sorted(ts)
+
+
+def test_followup_prompt_embeds_parent_output():
+    """turn N's prompt == turn N-1's prompt + output_tokens(parent) + a fresh
+    suffix — exactly what a retirement deposit of the parent contains."""
+    tr = _gen(
+        tenants=uniform_tenants(2, 2, followup_p=0.7), seed=3
+    ).generate(horizon=2048)
+    by_rid = {r.rid: r for r in tr.requests}
+    followups = [r for r in tr.requests if r.turn > 0]
+    assert followups, "trace produced no follow-up turns"
+    for f in followups:
+        parent = by_rid[f.parent]
+        assert f.conv == parent.conv
+        assert f.turn == parent.turn + 1
+        assert f.t >= parent.t
+        stem = parent.prompt + output_tokens(parent.rid, parent.decode_len)
+        assert f.prompt[: len(stem)] == stem
+        assert len(f.prompt) > len(stem)
+
+
+def test_openers_draw_from_tenant_prefix_pool():
+    tr = _gen().generate(horizon=2048)
+    for r in tr.requests:
+        if r.turn == 0:
+            p = next(t for t in _gen().tenants if t.tenant == r.tenant)
+            pools = {
+                prefix_tokens(r.tenant, pid, p.prefix_len)
+                for pid in range(p.n_prefixes)
+            }
+            assert r.prompt[: p.prefix_len] in pools
+
+
+# -- traffic shape -------------------------------------------------------------
+
+
+def test_diurnal_wave_phase_shifts_regions():
+    """Region 1's arrivals peak half a period after region 0's (2 regions):
+    compare mass inside each region's nominal peak window."""
+    wave = DiurnalWave(period=2000, amplitude=0.95)
+    tr = _gen(wave=wave, base_rate=0.05, seed=1).generate(horizon=2000)
+    arr = tr.arrivals_by_region()
+    # region 0 peaks at t=period/4, region 1 at t=3*period/4
+    w0 = range(0, 1000)
+    r0_early = sum(1 for t in arr[0] if t in w0) / max(1, len(arr[0]))
+    r1_early = sum(1 for t in arr[1] if t in w0) / max(1, len(arr[1]))
+    assert r0_early > 0.6
+    assert r1_early < 0.4
+
+
+def test_home_bias_concentrates_tenant_traffic():
+    tr = _gen(
+        tenants=uniform_tenants(2, 2, home_bias=9.0), base_rate=0.05
+    ).generate(horizon=4096)
+    for tenant in (0, 1):
+        home = tenant % 2
+        reqs = [r for r in tr.requests if r.tenant == tenant]
+        at_home = sum(1 for r in reqs if r.region == home)
+        assert at_home / len(reqs) > 0.6
+
+
+def test_zipf_skew_concentrates_templates():
+    p = TenantProfile(tenant=0, n_prefixes=16, prefix_skew=1.2, home_region=0)
+    tr = _gen(tenants=[p], n_regions=1, base_rate=0.1).generate(horizon=4096)
+    hot = prefix_tokens(0, 0, p.prefix_len)
+    openers = [r for r in tr.requests if r.turn == 0]
+    share = sum(1 for r in openers if r.prompt[: p.prefix_len] == hot) / len(openers)
+    assert share > 0.2  # rank-1 under Zipf(1.2, 16) ~ 0.29
+
+
+def test_with_flood_swamps_the_mix():
+    tr = _gen(
+        tenants=with_flood(uniform_tenants(6, 2), weight=40.0), base_rate=0.05
+    ).generate(horizon=2048)
+    share = sum(1 for r in tr.requests if r.tenant == 0) / len(tr)
+    assert share > 0.7
+    # and the flood's volume lands on one template
+    flood = [r for r in tr.requests if r.tenant == 0 and r.turn == 0]
+    assert len({r.prompt[:64] for r in flood}) == 1
+
+
+# -- validation ----------------------------------------------------------------
+
+
+def test_rejects_bad_configs():
+    with pytest.raises(ValueError):
+        TraceGenerator(n_regions=0, tenants=uniform_tenants(2, 1))
+    with pytest.raises(ValueError):
+        TraceGenerator(n_regions=1, tenants=[])
+    with pytest.raises(ValueError):
+        # tenant homed outside the region count
+        TraceGenerator(n_regions=1, tenants=uniform_tenants(4, 2))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**20),
+       followup=st.floats(min_value=0.0, max_value=0.7))
+def test_property_trace_invariants(seed, followup):
+    """Any seed: rids dense 0..n-1 in generation order, arrivals sorted,
+    every follow-up's parent precedes it and shares tenant/user/conv."""
+    gen = _gen(tenants=uniform_tenants(3, 2, followup_p=followup), seed=seed)
+    tr = gen.generate(horizon=1024)
+    assert sorted(r.rid for r in tr.requests) == list(range(len(tr)))
+    by_rid = {r.rid: r for r in tr.requests}
+    for r in tr.requests:
+        if r.parent is not None:
+            p = by_rid[r.parent]
+            assert (p.tenant, p.user, p.conv) == (r.tenant, r.user, r.conv)
+            assert p.rid < r.rid
