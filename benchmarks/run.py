@@ -4,8 +4,8 @@ benches (serving scheduler, slot placement, collective schedules, roofline).
     PYTHONPATH=src python -m benchmarks.run [--smoke] [section ...]
 
 Sections: paper, locks, restriction, placement, serving, serving_prefix,
-serving_continuous, serving_paging, router, region, obs, collectives, moe_ep,
-roofline.  Default: all.
+serving_continuous, serving_paging, router, fastpath, region, obs,
+collectives, moe_ep, roofline.  Default: all.
 ``region`` (fleets-of-fleets under the diurnal multi-tenant trace,
 ``benchmarks/region_bench.py``) is jax-free and smoke-lane-safe.
 ``serving_prefix`` is the jax-free shared-prefix slice of the serving section
@@ -23,7 +23,9 @@ Every section runs inside ``benchmarks.common.bench_section`` and emits a
 ``BENCH_<section>.json`` record in one shared schema — claims, headline
 metrics (sourced from the unified ``repro.obs.MetricsRegistry`` where the
 section keeps one), pass/fail — so the bench trajectory file set covers the
-whole suite, not just serving.
+whole suite, not just serving.  ``fastpath`` (the fissile contention-adaptive
+fast path on the fleet router, ``benchmarks/fastpath_bench.py``) is jax-free
+and smoke-lane-safe.
 
 ``--smoke`` shrinks every iteration knob (see benchmarks.common.smoke) so CI
 can exercise each benchmark's code path in seconds; claims still print but do
@@ -76,7 +78,7 @@ def main() -> int:
         common.SMOKE = True
     sections = args or [
         "paper", "locks", "restriction", "placement", "serving", "router",
-        "region", "obs", "collectives", "moe_ep", "roofline",
+        "fastpath", "region", "obs", "collectives", "moe_ep", "roofline",
     ]  # "serving" subsumes serving_prefix and serving_continuous
     t0 = time.time()
     # every section runs inside bench_section so it emits BENCH_<name>.json
@@ -127,6 +129,11 @@ def main() -> int:
 
         with common.bench_section("router"):
             router_bench.run_all()
+    if "fastpath" in sections:
+        from . import fastpath_bench
+
+        with common.bench_section("fastpath"):
+            fastpath_bench.run_all()
     if "region" in sections:
         from . import region_bench
 

@@ -71,6 +71,11 @@ class CNAStats:
     local_handovers: int = 0
     secondary_flushes: int = 0
     shuffles: int = 0
+    # fissile fast path (fissile=True): acquisitions that never built a queue
+    # node linkage, and the mode transitions around them
+    fast_acquires: int = 0
+    inflations: int = 0
+    deflations: int = 0
 
 
 class CNALock:
@@ -88,6 +93,7 @@ class CNALock:
         shuffle_reduction: bool = False,
         threshold2: int = THRESHOLD2,
         seed: int = 0x5EED,
+        fissile: bool = False,
     ) -> None:
         self.tail: CNANode | None = None          # <-- the single word of state
         self._atomic = threading.Lock()           # emulates SWAP/CAS only
@@ -96,6 +102,14 @@ class CNALock:
         self._rng = random.Random(seed)
         self._rng_lock = threading.Lock()
         self.stats = CNAStats()
+        # fissile fast path (Dice & Kogan, arXiv 2003.05025): a TS-word analog
+        # in front of the queue.  ``_fast_held`` is the TS bit; ``_fast_head``
+        # is where a slow-path acquirer that found an empty queue registers so
+        # the fast holder's release can adopt it as its successor chain.
+        self._fissile = fissile
+        self._fast_held = False
+        self._fast_holder: CNANode | None = None
+        self._fast_head: CNANode | None = None
 
     # -- emulated atomics ---------------------------------------------------
     def _swap_tail(self, new: CNANode | None) -> CNANode | None:
@@ -110,13 +124,40 @@ class CNALock:
                 return True
             return False
 
+    # -- fissile fast path ----------------------------------------------------
+    def _try_fast_takeover(self, me: CNANode) -> bool:
+        """A slow-path acquirer whose SWAP found an empty queue: either the
+        lock is genuinely free (take it, True) or a fast-path holder is in
+        flight — register as the handover target its release will adopt and
+        return False (caller spins on ``me.spin``)."""
+        with self._atomic:
+            if not self._fast_held:
+                me.spin = 1
+                return True
+            self._fast_head = me
+            return False
+
     # -- paper Fig. 3: cna_lock ---------------------------------------------
     def acquire(self, me: CNANode) -> None:
         me.next = None                             # L2
         me.socket = -1                             # L3
         me.spin = 0                                # L4
+        if self._fissile:
+            # the single CAS-analog decision: free *and* deflated -> no node
+            # linkage, no SWAP on tail, no queue state touched at all
+            with self._atomic:
+                if self.tail is None and not self._fast_held:
+                    self._fast_held = True
+                    self._fast_holder = me
+                    me.spin = 1
+                    self.stats.fast_acquires += 1
+                    return
         tail = self._swap_tail(me)                 # L6  (the one atomic)
         if tail is None:                           # L8: no one there?
+            if self._fissile and not self._try_fast_takeover(me):
+                while me.spin == 0:                # fast holder hands over
+                    time.sleep(0)
+                return
             me.spin = 1
             return
         me.socket = self._numa_node_of()           # L10
@@ -126,6 +167,27 @@ class CNALock:
 
     # -- paper Fig. 4: cna_unlock --------------------------------------------
     def release(self, me: CNANode) -> None:
+        if me is self._fast_holder:                # fissile fast-path release
+            with self._atomic:
+                self._fast_holder = None
+                if self.tail is None:              # nobody arrived: deflate —
+                    self._fast_held = False        # TS bit clears in the same
+                    self.stats.deflations += 1     # atomic step as the check
+                    return
+            # contended during our CS: inflate.  Adopt the queue head as our
+            # successor chain and fall into the normal CNA release below, so
+            # the very first contended handover already runs the full decide()
+            # over every waiter — identical to a plain-CNA holder's release.
+            while True:
+                with self._atomic:
+                    head = self._fast_head
+                    if head is not None:           # L36-analog: wait for the
+                        self._fast_head = None     # head to register itself
+                        self._fast_held = False
+                        break
+                time.sleep(0)
+            me.next = head
+            self.stats.inflations += 1
         if me.next is None:                        # L18: successor in main queue?
             if me.spin == 1:                       # L20: secondary queue empty?
                 if self._cas_tail(me, None):       # L23

@@ -106,6 +106,21 @@ class Unpark:
 
 
 @dataclass(frozen=True)
+class Inflate:
+    """A fissile wrapper's first contended arrival moved ``n_moved`` waiters
+    (the fast-path occupant plus the new arrival) into the full two-queue
+    core — the fast path is now off until both queues drain."""
+
+    n_moved: int
+
+
+@dataclass(frozen=True)
+class Deflate:
+    """A fissile wrapper's inner queues drained; the next uncontended
+    arrival takes the fast path again."""
+
+
+@dataclass(frozen=True)
 class Grant:
     """The next holder was chosen.  ``local`` is the paper's same-socket
     handover; ``kind`` names the path that produced it; ``events`` carries
@@ -114,7 +129,7 @@ class Grant:
     item: Any
     domain: int
     local: bool
-    kind: str  # "promote" | "fast_path" | "scan" | "flush" | "fifo"
+    kind: str  # "promote" | "fast_path" | "scan" | "flush" | "fifo" | "fast"
     events: tuple = ()
 
 
@@ -214,6 +229,11 @@ class DisciplineStats:
     scanned_remote: int = 0
     parked: int = 0
     unparked: int = 0
+    # fissile fast path (FissileDiscipline): grants that bypassed the
+    # two-queue core, and the mode transitions around them
+    fast_grants: int = 0
+    inflations: int = 0
+    deflations: int = 0
 
     @property
     def locality(self) -> float:
@@ -228,6 +248,8 @@ class DisciplineStats:
             self.grants += 1
             if grant.local:
                 self.local_grants += 1
+            if grant.kind == "fast":
+                self.fast_grants += 1
             events = grant.events + tuple(events)
         for ev in events:
             if isinstance(ev, Scan):
@@ -241,6 +263,10 @@ class DisciplineStats:
                 self.parked += 1
             elif isinstance(ev, Unpark):
                 self.unparked += 1
+            elif isinstance(ev, Inflate):
+                self.inflations += 1
+            elif isinstance(ev, Deflate):
+                self.deflations += 1
 
 
 # -- the stateful core --------------------------------------------------------
@@ -452,4 +478,130 @@ class RestrictedDiscipline:
     def drain(self) -> list[tuple[Any, int]]:
         out = self.inner.drain() + list(self._passive)
         self._passive.clear()
+        return out
+
+
+class FissileDiscipline:
+    """Contention-adaptive fast path in front of any discipline core, after
+    Fissile Locks (Dice & Kogan, arXiv 2003.05025): a TS-style fast path
+    serves uncontended traffic without touching the two-queue machinery, and
+    *inflates* to the full inner discipline at the first contended arrival.
+
+    Two modes:
+
+      * ``"fast"`` (deflated) — the inner core is empty and untouched; at
+        most one waiter occupies a single slot (the TS word's analog).  An
+        uncontended grant is one slot read: no ``decide()`` call, no RNG
+        draw, no queue restructuring, no satellite events — ``Grant`` kind
+        ``"fast"``.
+      * ``"inflated"`` — every ``arrive``/``release`` delegates verbatim to
+        the inner core (same RNG stream, same splicing), so an inflated run
+        is *bitwise-identical* to running the inner discipline bare.  The
+        mode transitions are the only additions: the arrival that finds the
+        fast slot occupied moves both waiters into the inner core in arrival
+        order (``Inflate``), and the grant that drains both inner queues
+        re-arms the fast path (``Deflate``, attached to that grant's events).
+
+    Equivalence contract (tests/test_fissile.py, tests/test_discipline.py):
+    under saturation — the queue never empties between the first contended
+    arrival and the last grant — the wrapper never takes the fast path, so
+    grant orders match a bare inner core with the same seed exactly.  Off
+    saturation, a fast grant is *forced* (its waiter is the only one), so
+    the fast path can never reorder grants; it only skips the RNG draws the
+    inner core would have spent choosing among one.
+
+    Barging is structurally impossible: the fast slot is used only in fast
+    mode, and fast mode requires the inner core (both queues *and* any
+    restriction passive list) to be empty — no arrival can bypass inflated
+    waiters, unlike the raw TS path of a real fissile lock.
+
+    Composes outside ``RestrictedDiscipline`` (the uncontended case trivially
+    satisfies any ``max_active >= 1`` cap, so restriction only matters once
+    inflated) and exposes the same ``controller``/``max_active`` surface so
+    adapters are wrapper-agnostic."""
+
+    def __init__(self, inner) -> None:
+        self.inner = inner
+        self.mode = "fast"
+        self._slot: tuple[Any, int] | None = None
+        self.fast_grants = 0
+        self.inflations = 0
+        self.deflations = 0
+
+    # -- adapter passthroughs (CNAAdmissionQueue reads these) -----------------
+    @property
+    def controller(self):
+        return getattr(self.inner, "controller", None)
+
+    @property
+    def max_active(self):
+        return getattr(self.inner, "max_active", None)
+
+    @property
+    def n_secondary(self) -> int:
+        return self.inner.n_secondary if self.mode == "inflated" else 0
+
+    @property
+    def n_passive(self) -> int:
+        return getattr(self.inner, "n_passive", 0)
+
+    def __len__(self) -> int:
+        return len(self.inner) + (1 if self._slot is not None else 0)
+
+    def __iter__(self) -> Iterator[tuple[Any, int]]:
+        if self._slot is not None:
+            yield self._slot
+        yield from self.inner
+
+    def fast_ready(self) -> bool:
+        """True when the next ``release`` will be an uncontended fast-path
+        grant — drivers gate *their own* bypasses (skip pricing, skip
+        candidate scans) on this so every skipped side effect is confined to
+        transitions that are bitwise-invisible at saturation."""
+        return self.mode == "fast" and self._slot is not None
+
+    def fast_peek(self) -> tuple[Any, int] | None:
+        """The ``(item, domain)`` the fast slot would grant next, or None —
+        lets a driver check preconditions (headroom at the item's home)
+        *before* committing to the bypass."""
+        return self._slot if self.mode == "fast" else None
+
+    def arrive(self, item: Any, domain: int) -> tuple:
+        if self.mode == "inflated":
+            return self.inner.arrive(item, domain)
+        if self._slot is None:
+            self._slot = (item, domain)  # the single CAS-analog decision
+            return ()
+        # first contended arrival: inflate to the full two-queue state, in
+        # arrival order (the fast occupant was there first)
+        first, self._slot = self._slot, None
+        self.mode = "inflated"
+        self.inflations += 1
+        events: tuple = (Inflate(2),)
+        events += tuple(self.inner.arrive(*first))
+        events += tuple(self.inner.arrive(item, domain))
+        return events
+
+    def release(self, holder_domain: int) -> Grant | None:
+        if self.mode == "fast":
+            if self._slot is None:
+                return None
+            (item, dom), self._slot = self._slot, None
+            self.fast_grants += 1
+            return Grant(item, dom, local=dom == holder_domain, kind="fast")
+        g = self.inner.release(holder_domain)
+        if g is None:  # defensive: an empty inflated core deflates silently
+            self.mode = "fast"
+            self.deflations += 1
+            return None
+        if not len(self.inner):  # both queues (and any passive list) drained
+            self.mode = "fast"
+            self.deflations += 1
+            g = Grant(g.item, g.domain, g.local, g.kind, g.events + (Deflate(),))
+        return g
+
+    def drain(self) -> list[tuple[Any, int]]:
+        out = ([self._slot] if self._slot is not None else []) + self.inner.drain()
+        self._slot = None
+        self.mode = "fast"
         return out

@@ -8,6 +8,8 @@ Implemented locks (paper Section 7 evaluates this exact menagerie):
   * ``MCSSim``        — MCS queue lock: the paper's baseline
   * ``CNASim``        — the paper's contribution (two queues + fairness threshold)
   * ``CNAOptSim``     — CNA + Section-6 shuffle-reduction optimization
+  * ``FissileCNASim`` — CNA behind a fissile fast path (arXiv 2003.05025):
+                        uncontended grants bypass the two-queue core
   * ``RCNASim``       — CNA under GCR-style concurrency restriction
   * ``AdaptiveRCNASim`` — RCNA with the cap driven online by the shared
                         ``repro.placement.AdaptiveController``
@@ -130,6 +132,23 @@ class CNASim(LockSim):
 class CNAOptSim(CNASim):
     name = "cna_opt"
     shuffle_reduction = True
+
+
+class FissileCNASim(CNASim):
+    """CNA behind the fissile fast path (Dice & Kogan, arXiv 2003.05025): the
+    core is ``FissileDiscipline(CNADiscipline)``, so an uncontended waiter
+    occupies the single fast slot and is granted without a ``decide()`` call
+    (zero RNG draws, zero scan charges), and the first contended arrival
+    inflates to the full two-queue state.  At saturation the wrapper is
+    bitwise-identical to ``CNASim`` on the same seed — the fourth column of
+    the cross-driver grant-order contract (tests/test_discipline.py)."""
+
+    name = "cna_fissile"
+
+    def _make_core(self, inner):
+        from .discipline import FissileDiscipline
+
+        return FissileDiscipline(inner)
 
 
 class RCNASim(CNASim):
@@ -413,7 +432,7 @@ class HMCSSim(CohortSim):
 ALL_LOCKS = {
     cls.name: cls
     for cls in [
-        TASSim, TicketSim, HBOSim, MCSSim, CNASim, CNAOptSim, RCNASim,
-        AdaptiveRCNASim, CohortSim, HMCSSim,
+        TASSim, TicketSim, HBOSim, MCSSim, CNASim, CNAOptSim, FissileCNASim,
+        RCNASim, AdaptiveRCNASim, CohortSim, HMCSSim,
     ]
 }

@@ -20,6 +20,12 @@ scan/restructure costs grow with queue depth.  It takes either a static int
 or an ``repro.placement.AdaptiveController``; with a controller, callers feed
 ``observe_handover(latency)`` after each grant and the active-set cap tracks
 the observed handover cost online (the GCR feedback loop).
+
+``fissile=True`` layers the fissile fast path (``FissileDiscipline``,
+arXiv 2003.05025) outermost: a lone waiter is granted in O(1) with no
+``decide()`` call, no RNG draw and no restriction bookkeeping; the first
+contended push inflates to the full discipline stack, which deflates again
+when it drains.  At saturation the wrapper is bitwise-invisible.
 """
 
 from __future__ import annotations
@@ -34,6 +40,7 @@ from .discipline import (
     CNADiscipline,
     DisciplineStats,
     FIFODiscipline,
+    FissileDiscipline,
     RestrictedDiscipline,
 )
 
@@ -56,6 +63,7 @@ class CNAAdmissionQueue(Generic[T]):
         seed: int = 0xC0A,
         max_active: "int | Any | None" = None,
         rotate_after: int = 64,
+        fissile: bool = False,
     ) -> None:
         # NOTE (adaptation decision): in the *lock*, shuffle reduction exists
         # to avoid the memory-system cost of restructuring the waiter queue
@@ -73,10 +81,27 @@ class CNAAdmissionQueue(Generic[T]):
         )
         if max_active is not None:
             self._d = RestrictedDiscipline(self._d, max_active=max_active, rotate_after=rotate_after)
+        if fissile:
+            # outermost, so a lone waiter bypasses both the CNA core *and* the
+            # restriction bookkeeping (one item trivially satisfies any cap)
+            self._d = FissileDiscipline(self._d)
         self.stats = PolicyStats()
         # the most recent pop's Grant — kind + discipline events survive the
         # (value, domain) narrowing so tracers can attach them to spans
         self.last_grant = None
+
+    def fast_ready(self) -> bool:
+        """True when the next ``pop`` is an uncontended fissile fast-path
+        grant (False for non-fissile queues) — schedulers gate their own
+        bypasses on this."""
+        f = getattr(self._d, "fast_ready", None)
+        return f() if f is not None else False
+
+    def fast_peek(self) -> tuple[T, int] | None:
+        """The ``(value, domain)`` the fissile fast slot would grant next, or
+        None (always None for non-fissile queues)."""
+        f = getattr(self._d, "fast_peek", None)
+        return f() if f is not None else None
 
     @property
     def controller(self):

@@ -15,7 +15,9 @@ per-engine ``PrefixKVStore`` reuse turns the steering into skipped prefill
 positions (printed per replica).  KV shipping is on by default in the fleet
 demo (``--no-kv-ship`` reverts to shed-and-re-prefill): every priced
 ship-vs-reprefill decision prints one ``[ship?]`` line — the runnable
-companion to docs/architecture.md's router walkthrough.
+companion to docs/architecture.md's router walkthrough.  ``--fissile`` turns
+on the contention-adaptive fast path (uncontended sessions dispatch home in
+one step; the ``[router]`` line reports ``fast_dispatches``).
 
 ``--arrivals RATE`` switches the driver to a continuous Poisson arrival
 process (RATE requests per engine tick, mixed prompt lengths) against the
@@ -95,6 +97,11 @@ def main(argv=None) -> int:
     ap.add_argument("--no-kv-ship", action="store_true",
                     help="disable priced prefix-KV shipping in the fleet "
                          "demo (PR 4's shed-and-re-prefill behaviour)")
+    ap.add_argument("--fissile", action="store_true",
+                    help="enable the contention-adaptive fast path in the "
+                         "fleet demo: uncontended arrivals dispatch to their "
+                         "home replica in one step, contention inflates back "
+                         "to full CNA admission")
     ap.add_argument("--regions", type=int, default=0, metavar="N",
                     help="run the region tier demo: a diurnal multi-tenant "
                          "trace over N regions of fleets (jax-free)")
@@ -376,7 +383,8 @@ def serve_fleet(args) -> int:
     # the shared tracer nests each engine's "request" span under the router's
     # "session" span (same trace key), giving the one-trace-every-level view
     router = ReplicaRouter(replicas, sync_every=args.sync_every,
-                           kv_ship=not args.no_kv_ship, tracer=tracer)
+                           kv_ship=not args.no_kv_ship,
+                           fissile=args.fissile, tracer=tracer)
 
     t0 = time.time()
     i = done = 0
@@ -410,6 +418,7 @@ def serve_fleet(args) -> int:
           f"reprefill_tokens={s.reprefill_tokens}/{s.routed_tokens} "
           f"sheds={s.sheds} ships={s.ships} shipped_tok={s.shipped_tokens} "
           f"reprefill_avoided={s.reprefill_avoided} syncs={s.syncs} "
+          f"fast_dispatches={s.fast_dispatches} "
           f"dispatch_locality={router.metrics.locality:.2f} wall={wall:.1f}s")
     for rep in replicas:
         eng = rep.engine

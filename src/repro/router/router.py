@@ -73,6 +73,7 @@ class Session:
     matched_len: int = 0          # federation's believed cached prefix (tokens)
     local_matched: int = 0        # target replica's actual cached prefix (tokens)
     ship: ShipDecision | None = None
+    fast: bool = False            # dispatched via the fissile fast path
 
     @property
     def stall(self) -> int:
@@ -85,6 +86,8 @@ class RouterStats:
     """Router-level counters beyond the scheduler's admission metrics."""
 
     dispatched: int = 0
+    fast_dispatches: int = 0      # fissile fast path: headroom-home grants
+                                  # that skipped candidates/shed/ship pricing
     sheds: int = 0
     syncs: int = 0
     reprefill_tokens: int = 0     # prompt tokens the target replica had to
@@ -162,6 +165,7 @@ class ReplicaRouter:
         prefetch: bool = False,
         prefetch_margin: int = 1,
         victim_cache: bool = False,
+        fissile: bool = False,
         tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
     ) -> None:
         self.replicas = list(replicas)
@@ -180,9 +184,13 @@ class ReplicaRouter:
             occupancy=lambda: {r: self.replicas[r].occupancy for r in range(n)},
             max_age=max_age,
         )
+        # fissile: the admission discipline runs behind the fast path
+        # (repro.core.discipline.FissileDiscipline) and the router gates its
+        # own pipeline bypass on scheduler.fast_ready() — see dispatch_one
+        self._fissile = bool(fissile)
         self.scheduler = CNAScheduler(
             fairness_threshold=fairness_threshold, seed=seed, topology=topo,
-            tracer=tracer,
+            fissile=fissile, tracer=tracer,
         )
         # one tracer for router + scheduler (NULL_TRACER when off): session
         # root spans open here, the scheduler's queue_wait spans nest inside
@@ -274,10 +282,15 @@ class ReplicaRouter:
                 self._prefetch()
 
     # -- admission -------------------------------------------------------------
-    def submit(self, session: Session) -> int:
+    def submit(self, session: Session, home: int | None = None) -> int:
         """Home ``session`` via the federation and queue it under the CNA
-        discipline; returns the home replica."""
-        home, matched = self.federation.route(session.prompt, now=self.now)
+        discipline; returns the home replica.  An explicit ``home`` pins the
+        session instead of routing it (scripted drivers — the cross-driver
+        grant-order contract — steer the discipline with exact domains)."""
+        if home is None:
+            home, matched = self.federation.route(session.prompt, now=self.now)
+        else:
+            matched = 0
         session.home, session.matched_len = home, matched
         session.submit_t = self.now
         if self.tracer:
@@ -307,6 +320,17 @@ class ReplicaRouter:
         charge for re-pointing the dispatch pipe."""
         if not len(self.scheduler):
             return None
+        if self._fissile:
+            peek = self.scheduler.fast_peek()
+            if peek is not None and self._has_headroom(peek[1]):
+                # fissile fast path: the lone uncontended session goes to its
+                # own home, which has headroom — no candidate scan, no pipe
+                # repoint, no shed, no ship pricing, no federation lookup.
+                # The grant itself is forced (one waiter), so everything
+                # skipped is bitwise-invisible to the discipline; all *real*
+                # accounting (admit, fleet in-flight, stats, stall) is booked
+                # exactly as on the full pipeline below.
+                return self._dispatch_fast()
         candidates = [r for r in range(len(self.replicas)) if self._has_headroom(r)]
         if not candidates:
             return None
@@ -359,6 +383,36 @@ class ReplicaRouter:
         session.local_matched = self.replicas[target].admit(session, self.now)
         self.fleet.note_admit(target)
         self.stats.dispatched += 1
+        self.stats.routed_tokens += len(session.prompt)
+        self.stats.reprefill_tokens += len(session.prompt) - session.local_matched
+        if session.local_matched:
+            self.stats.local_hits += 1
+        self.stats.stalls.append(session.stall)
+        return session, target, dist
+
+    def _dispatch_fast(self) -> tuple[Session, int, int]:
+        """The fissile bypass: grant the fast-slot session straight to its
+        home replica.  Caller has already confirmed ``fast_peek()`` is live
+        and the home has headroom.  ``session.ship`` stays None and no
+        federation/fabric state is touched — the regression tests pin that a
+        headroom-home dispatch books zero phantom pricing."""
+        session = self.scheduler.next_request()
+        target = session.home
+        prev = self._last_target
+        dist = 0 if target == prev else self.topology.distance(prev, target)
+        self._last_target = target
+        session.replica = target
+        session.dispatch_t = self.now
+        session.fast = True
+        if self.tracer:
+            self.tracer.span(
+                "dispatch", session.sid, self.now, self.now,
+                replica=target, steer_distance=dist, fast=True,
+            )
+        session.local_matched = self.replicas[target].admit(session, self.now)
+        self.fleet.note_admit(target)
+        self.stats.dispatched += 1
+        self.stats.fast_dispatches += 1
         self.stats.routed_tokens += len(session.prompt)
         self.stats.reprefill_tokens += len(session.prompt) - session.local_matched
         if session.local_matched:

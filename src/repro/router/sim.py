@@ -42,6 +42,12 @@ class FleetCostModel:
     c_decode: int = 2       # per generated token (slot residency)
     c_dispatch: int = 2     # router work per admission
     c_steer: int = 8        # extra router work per unit replica-distance switched
+    # router work the *full* dispatch pipeline pays beyond the irreducible
+    # admission (candidate scan, shed checks, ship pricing / federation
+    # lookups) — a fissile fast-path dispatch skips it.  Default 0 keeps
+    # every pre-existing bench and determinism pin bit-identical; the
+    # fastpath bench sets it on both arms so only the bypass differs.
+    c_pipeline: int = 0
 
 
 class ReplicaCache:
@@ -390,7 +396,11 @@ class FleetResult:
     ttfts: list = field(default_factory=list)
     # admission stall (submit -> first token), the ship/re-prefill currency
     admission_stall_total: int = 0
+    admission_stall_p50: float = 0.0
     admission_stall_p99: float = 0.0
+    # fissile fast path (router_kwargs={"fissile": True}): dispatches that
+    # bypassed the full pipeline (0 everywhere when fissile is off)
+    fast_dispatches: int = 0
     # KV shipping (0 everywhere when shipping is off)
     ships: int = 0
     shipped_tokens: int = 0
@@ -571,6 +581,8 @@ def simulate(
                 break
             session, target, dist = d
             cost = cm.c_dispatch + cm.c_steer * dist
+            if not getattr(session, "fast", False):
+                cost += cm.c_pipeline  # full pipeline; the fast path skips it
             start = t + cost
             busy_until = start
             uncached = len(session.prompt) - session.local_matched
@@ -627,6 +639,7 @@ def simulate(
     stalls = sorted(stats.stalls)
     p99 = stalls[min(len(stalls) - 1, int(0.99 * len(stalls)))] if stalls else 0
     adm = sorted(admission_stalls)
+    adm_p50 = adm[min(len(adm) - 1, int(0.50 * len(adm)))] if adm else 0
     adm_p99 = adm[min(len(adm) - 1, int(0.99 * len(adm)))] if adm else 0
     m = getattr(router, "metrics", None)
     return FleetResult(
@@ -644,7 +657,9 @@ def simulate(
         per_replica_served=[r.served for r in replicas],
         ttfts=ttfts,
         admission_stall_total=sum(adm),
+        admission_stall_p50=float(adm_p50),
         admission_stall_p99=float(adm_p99),
+        fast_dispatches=getattr(stats, "fast_dispatches", 0),
         ships=getattr(stats, "ships", 0),
         shipped_tokens=getattr(stats, "shipped_tokens", 0),
         ship_cycles=getattr(stats, "ship_cycles", 0),

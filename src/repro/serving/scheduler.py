@@ -128,6 +128,26 @@ class _BaseScheduler:
         if self.metrics.placement is not None:
             self.metrics.placement.record_handover(latency)
 
+    def fast_ready(self) -> bool:
+        """True when the next admission is an uncontended fissile fast-path
+        grant (always False without ``fissile=True``) — callers such as the
+        fleet router gate their own pipeline bypasses on this, so a skipped
+        side effect can only coincide with a grant the discipline core never
+        saw either."""
+        f = getattr(self._q, "fast_ready", None)
+        return f() if f is not None else False
+
+    def fast_peek(self):
+        """The ``(request, domain)`` an uncontended fissile fast-path grant
+        would admit next, or None — lets the router confirm headroom at the
+        request's home before committing to its bypass."""
+        f = getattr(self._q, "fast_peek", None)
+        out = f() if f is not None else None
+        if out is None:
+            return None
+        (request, _t_submit), domain = out
+        return request, domain
+
     def distance_to(self, domain: int) -> int:
         """Distance of a hypothetical switch from the current domain: 0 when
         local, 1 under a flat (or absent) topology, 2 across groups."""
@@ -209,6 +229,7 @@ class CNAScheduler(_BaseScheduler):
         topology: Topology | None = None,
         max_active=None,  # int | repro.placement.AdaptiveController | None
         rotate_after: int = 64,
+        fissile: bool = False,  # fissile fast path over the discipline stack
         tracer=None,  # repro.obs.Tracer | None (None => zero-cost off)
     ):
         super().__init__(
@@ -218,6 +239,7 @@ class CNAScheduler(_BaseScheduler):
                 seed=seed,
                 max_active=max_active,
                 rotate_after=rotate_after,
+                fissile=fissile,
             ),
             topology=topology,
             tracer=tracer,

@@ -97,9 +97,10 @@ def drive_sim(domains, holder_domain, seed, threshold, shuffle, threshold2):
     return order
 
 
-def drive_queue(domains, holder_domain, seed, threshold, shuffle, threshold2):
+def drive_queue(domains, holder_domain, seed, threshold, shuffle, threshold2, fissile=False):
     q = CNAAdmissionQueue(
-        threshold=threshold, shuffle_reduction=shuffle, threshold2=threshold2, seed=seed
+        threshold=threshold, shuffle_reduction=shuffle, threshold2=threshold2,
+        seed=seed, fissile=fissile,
     )
     for i, d in enumerate(domains):
         q.push(i, d)
@@ -108,6 +109,119 @@ def drive_queue(domains, holder_domain, seed, threshold, shuffle, threshold2):
     while len(q):
         v, dom = q.pop(dom)
         order.append(v)
+    return order
+
+
+# -- the fissile fourth column: every driver wrapped in the fast path ----------
+
+
+def drive_lock_fissile(domains, holder_domain, seed, threshold, shuffle, threshold2):
+    """The scripted lock drive with ``fissile=True``: the holder's acquire
+    takes the fast path (no tail SWAP), so the first scripted waiter's SWAP
+    finds an empty queue and registers as the fast head the holder's release
+    adopts.  Everything after that is the plain script."""
+    cell = {"d": holder_domain}
+    lock = CNALock(
+        numa_node_of=lambda: cell["d"],
+        threshold=threshold,
+        shuffle_reduction=shuffle,
+        threshold2=threshold2,
+        seed=seed,
+        fissile=True,
+    )
+    holder = CNANode()
+    lock.acquire(holder)  # fissile fast path: tail stays None
+    assert lock.stats.fast_acquires == 1
+    nodes = []
+    for d in domains:
+        n = CNANode()
+        n.next, n.spin, n.socket = None, 0, d
+        tail = lock._swap_tail(n)
+        if tail is None:
+            assert not lock._try_fast_takeover(n)  # holder still holds
+        else:
+            tail.next = n
+        nodes.append(n)
+    index_of = {id(n): i for i, n in enumerate(nodes)}
+    waiting = list(nodes)
+    order = []
+    cur = holder
+    while True:
+        lock.release(cur)
+        nxt = next((n for n in waiting if n.spin != 0), None)
+        if nxt is None:
+            break
+        order.append(index_of[id(nxt)])
+        waiting.remove(nxt)
+        cur = nxt
+    assert lock.tail is None and not lock._fast_held
+    assert lock.stats.inflations == 1  # saturation: one inflation, no deflation mid-run
+    return order
+
+
+def drive_sim_fissile(domains, holder_domain, seed, threshold, shuffle, threshold2):
+    from repro.core.locks_sim import FissileCNASim
+
+    class _FissileOptSim(FissileCNASim):
+        name = "cna_fissile_opt"
+        shuffle_reduction = True
+
+    topo = table((holder_domain, *domains))
+    sim = Simulator(
+        _FissileOptSim if shuffle else FissileCNASim,
+        n_threads=len(domains) + 1,
+        topology=topo,
+        seed=seed,
+        lock_kwargs={"threshold": threshold, "threshold2": threshold2},
+    )
+    assert sim.lock.arrive(0) is not None  # uncontended: tid 0 holds
+    for tid in range(1, len(domains) + 1):
+        assert sim.lock.arrive(tid) is None
+    order = []
+    cur = 0
+    while True:
+        out = sim.lock.release(cur)
+        if out is None:
+            break
+        cur = out[0]
+        order.append(cur - 1)
+    return order
+
+
+def drive_router(domains, holder_domain, seed, threshold, shuffle, fissile):
+    """ReplicaRouter as a grant-order driver: one ample-capacity replica per
+    domain, homes pinned at submit (no federation routing), all sessions
+    queued before any dispatch — saturation, the regime where the fissile
+    wrapper must be bitwise-invisible."""
+    from repro.router.router import ReplicaRouter, Session
+    from repro.router.sim import SimReplica
+    from repro.serving.scheduler import CNAScheduler
+
+    n_dom = max([holder_domain, *domains]) + 1
+    replicas = [
+        SimReplica(r, len(domains) + 1, cache_budget=10_000) for r in range(n_dom)
+    ]
+    router = ReplicaRouter(
+        replicas, fairness_threshold=threshold, seed=seed, sync_every=0,
+        fissile=fissile,
+    )
+    # the router does not expose shuffle_reduction (deliberately — see
+    # CNAAdmissionQueue's adaptation note); the contract drive swaps in an
+    # identically-seeded scheduler carrying it so all five parameter columns
+    # cover the same grid
+    router.scheduler = CNAScheduler(
+        fairness_threshold=threshold, shuffle_reduction=shuffle, seed=seed,
+        topology=router.topology, fissile=fissile,
+    )
+    router.tracer = router.scheduler.tracer
+    router.scheduler.current_domain = holder_domain
+    sessions = [Session(sid=i, prompt=(i,), decode_len=1) for i in range(len(domains))]
+    for s, d in zip(sessions, domains):
+        router.submit(s, home=d)
+    order = []
+    while (out := router.dispatch_one()) is not None:
+        order.append(out[0].sid)
+    assert router.stats.sheds == 0  # ample capacity: pure discipline order
     return order
 
 
@@ -142,6 +256,28 @@ def test_three_drivers_identical_grant_order(sched, threshold, shuffle, threshol
     queue_order = drive_queue(*args)
     assert lock_order == sim_order == queue_order
     assert sorted(lock_order) == list(range(len(domains)))  # nobody lost
+    # the fissile fourth column: at saturation (every waiter queued before
+    # the first grant) the fast-path wrapper is bitwise-invisible, so the
+    # fissile-wrapped lock / sim / queue agree with plain CNA exactly
+    assert drive_lock_fissile(*args) == lock_order
+    assert drive_sim_fissile(*args) == lock_order
+    assert drive_queue(*args, fissile=True) == lock_order
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULES))
+@pytest.mark.parametrize("threshold,shuffle", [(0xFFFF, False), (0x1, False), (0xF, True)])
+@pytest.mark.parametrize("seed", [7, 0xBEEF])
+def test_router_driver_keeps_the_grant_order_contract(sched, threshold, shuffle, seed):
+    """The fleet router as a further driver column: at saturation with ample
+    capacity its dispatch order equals the bare admission queue's grant
+    order — and the fissile router equals both (the fast path never fires
+    while inflated waiters exist)."""
+    domains = SCHEDULES[sched]
+    holder = domains[0]
+    queue_order = drive_queue(domains, holder, seed, threshold, shuffle, 0xFF)
+    plain = drive_router(domains, holder, seed, threshold, shuffle, fissile=False)
+    fissile = drive_router(domains, holder, seed, threshold, shuffle, fissile=True)
+    assert plain == fissile == queue_order
 
 
 def test_equivalence_holds_for_hierarchical_topology_mapping():

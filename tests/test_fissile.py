@@ -1,0 +1,372 @@
+"""The fissile fast path's differential harness.
+
+``FissileDiscipline`` (repro.core.discipline) morphs between two modes —
+a single-slot fast path and the full CNA two-queue core — and the morphing
+boundary is exactly the kind of concurrent protocol that needs invariants
+encoded as state-machine tests, not example runs.  The load-bearing property
+here is the *shadow construction*: a plain ``CNADiscipline`` runs side by
+side through every interleaving the state machine generates, and must grant
+the same item at every release.  A fissile fast grant is forced (its waiter
+is the only one), so the only divergence it can introduce is the RNG draw
+the shadow spent deciding among one — which the machine resynchronizes,
+turning "bitwise-identical at saturation" into the stronger "never reorders
+under any interleaving".
+
+Also here: the mode invariants (fast mode <=> empty inner core; deflation
+only when both queues drain), inflate/deflate conservation, the fissile
+``CNALock`` (threaded driver) under scripted and threaded stress, and the
+router-level regressions — a headroom-home fast dispatch books zero
+fabric/ship/federation counters, and the phase-attribution conservation law
+survives the bypass.
+"""
+
+import random
+import threading
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_compat import given, settings, st
+
+from repro.core.cna import CNALock, CNANode, run_lock_stress
+from repro.core.discipline import (
+    CNADiscipline,
+    Deflate,
+    DisciplineStats,
+    FissileDiscipline,
+    Inflate,
+    RestrictedDiscipline,
+)
+
+
+# -- the state machine ---------------------------------------------------------
+
+# an op is (arrive?, domain): True -> arrive(fresh item, domain),
+# False -> release(current holder domain).  Domains span two "sockets plus
+# overflow" so schedules exercise local, remote and mixed interleavings.
+OPS = st.lists(
+    st.tuples(st.booleans(), st.integers(min_value=0, max_value=3)),
+    min_size=1,
+    max_size=60,
+)
+
+
+@settings(max_examples=120)
+@given(
+    ops=OPS,
+    seed=st.integers(min_value=0, max_value=2**16),
+    threshold=st.sampled_from([0x0, 0x1, 0xF, 0xFFFF]),
+    shuffle=st.booleans(),
+)
+def test_state_machine_fissile_never_reorders_vs_plain_cna(ops, seed, threshold, shuffle):
+    """Shadow construction over arbitrary interleavings of arrive/release:
+
+    * mode invariant — fast mode implies an empty inner core (so a fast
+      grant can never barge past an inflated waiter), inflated mode implies
+      an empty fast slot;
+    * inflation moves exactly the slot occupant plus the contended arrival;
+    * deflation fires only when both inner queues have drained;
+    * the shadow plain CNA grants the *same item* at every release.  After a
+      fast grant the shadow's RNG is resynced to the fissile inner core's
+      (the fast path draws zero; the shadow spent draws choosing among one),
+      so lockstep extends through any number of inflate/deflate cycles.
+    """
+    fiss = FissileDiscipline(
+        CNADiscipline(threshold=threshold, shuffle_reduction=shuffle,
+                      rng=random.Random(seed))
+    )
+    shadow = CNADiscipline(threshold=threshold, shuffle_reduction=shuffle,
+                           rng=random.Random(seed))
+    stats = DisciplineStats()
+    holder_dom = 0
+    n_arrived = 0
+    granted = []
+    for is_arrive, dom in ops:
+        if is_arrive:
+            evs = fiss.arrive(n_arrived, dom)
+            shadow.arrive(n_arrived, dom)
+            stats.consume(None, evs)
+            n_arrived += 1
+            inflates = [e for e in evs if isinstance(e, Inflate)]
+            if inflates:
+                assert len(inflates) == 1 and inflates[0].n_moved == 2
+                assert fiss.mode == "inflated"
+        else:
+            g = fiss.release(holder_dom)
+            g_shadow = shadow.release(holder_dom)
+            stats.consume(g)
+            assert (g is None) == (g_shadow is None)
+            if g is None:
+                continue
+            # the shadow grants the same item under ANY interleaving
+            assert g.item == g_shadow.item and g.domain == g_shadow.domain
+            assert g.local == g_shadow.local
+            if g.kind == "fast":
+                # no barging: the fast path only fires over an empty core,
+                # and it costs zero RNG draws — resync the shadow's
+                assert len(fiss.inner) == 0
+                shadow.rng.setstate(fiss.inner.rng.getstate())
+            if any(isinstance(e, Deflate) for e in g.events):
+                assert fiss.mode == "fast" and len(fiss.inner) == 0
+            granted.append(g.item)
+            holder_dom = g.domain
+        # mode invariants hold after every transition
+        if fiss.mode == "fast":
+            assert len(fiss.inner) == 0
+        else:
+            assert fiss.fast_peek() is None and not fiss.fast_ready()
+        assert len(fiss) == len(shadow)  # conservation, op by op
+
+    # nothing lost, nothing duplicated, and the wrapper's own counters agree
+    # with the event-folded stats
+    assert len(granted) == len(set(granted))
+    assert len(granted) + len(fiss) == n_arrived
+    assert sorted(granted + [item for item, _ in fiss]) == list(range(n_arrived))
+    assert stats.fast_grants == fiss.fast_grants
+    assert stats.inflations == fiss.inflations
+    assert stats.deflations == fiss.deflations
+    # transitions pair up: deflations can trail inflations by at most the one
+    # inflation currently open
+    assert fiss.inflations - fiss.deflations == (1 if fiss.mode == "inflated" else 0)
+
+
+@settings(max_examples=40)
+@given(
+    ops=OPS,
+    seed=st.integers(min_value=0, max_value=2**16),
+    max_active=st.integers(min_value=1, max_value=4),
+)
+def test_fissile_composes_over_restriction(ops, seed, max_active):
+    """Fissile outside GCR restriction: a lone waiter bypasses both layers
+    (one item trivially satisfies any cap >= 1), the inflated core honours
+    the cap, and items are conserved through every transition."""
+    fiss = FissileDiscipline(
+        RestrictedDiscipline(
+            CNADiscipline(threshold=0xF, rng=random.Random(seed)),
+            max_active=max_active, rotate_after=8,
+        )
+    )
+    assert fiss.max_active == max_active
+    holder_dom = 0
+    n_arrived = 0
+    granted = []
+    for is_arrive, dom in ops:
+        if is_arrive:
+            fiss.arrive(n_arrived, dom)
+            n_arrived += 1
+        else:
+            g = fiss.release(holder_dom)
+            if g is None:
+                continue
+            granted.append(g.item)
+            holder_dom = g.domain
+        if fiss.mode == "inflated":
+            # the restriction's active set stays within its cap (+1
+            # transiently inside release, re-absorbed before it returns)
+            assert len(fiss.inner.inner) <= max_active
+    assert sorted(granted + [item for item, _ in fiss]) == list(range(n_arrived))
+
+
+def test_fissile_drain_resets_to_fast_mode():
+    f = FissileDiscipline(CNADiscipline(rng=random.Random(0)))
+    f.arrive("a", 0)
+    f.arrive("b", 1)  # inflates
+    f.arrive("c", 0)
+    assert f.mode == "inflated"
+    assert sorted(x for x, _ in f.drain()) == ["a", "b", "c"]
+    assert f.mode == "fast" and len(f) == 0 and not f.fast_ready()
+    f.arrive("d", 2)
+    assert f.fast_ready() and f.fast_peek() == ("d", 2)
+    g = f.release(0)
+    assert g.kind == "fast" and g.item == "d" and not g.local
+
+
+# -- the threaded lock driver --------------------------------------------------
+
+
+def test_fissile_lock_uncontended_cycle_deflates():
+    """Uncontended acquire/release cycles ride the fast path every time and
+    never touch the queue word."""
+    lock = CNALock(fissile=True)
+    node = CNANode()
+    for _ in range(7):
+        lock.acquire(node)
+        assert lock._fast_held and lock.tail is None
+        lock.release(node)
+        assert not lock._fast_held
+    assert lock.stats.fast_acquires == 7
+    assert lock.stats.deflations == 7
+    assert lock.stats.inflations == 0
+    assert lock.stats.handovers == 0  # no queue handover ever happened
+
+
+def test_fissile_lock_inflates_to_full_decide_over_the_whole_chain():
+    """The fast holder's contended release adopts the registered queue head
+    as its successor chain and runs the full CNA decide() — the first
+    contended handover already sees every waiter, which is what makes the
+    lock bitwise-identical to plain CNA at saturation (the contract test in
+    test_discipline.py drives both through shared schedules)."""
+    cell = {"d": 0}
+    lock = CNALock(numa_node_of=lambda: cell["d"], threshold=(1 << 29) - 1,
+                   fissile=True)
+    holder = CNANode()
+    lock.acquire(holder)  # fast
+    nodes = []
+    for d in [1, 1, 0]:  # two remote waiters ahead of a local one
+        n = CNANode()
+        n.next, n.spin, n.socket = None, 0, d
+        tail = lock._swap_tail(n)
+        if tail is None:
+            assert not lock._try_fast_takeover(n)  # holder still in its CS
+        else:
+            tail.next = n
+        nodes.append(n)
+    lock.release(holder)
+    # keep_lock_local ~ always under this threshold: the grant scanned past
+    # both remote waiters to the local one — impossible unless the release
+    # decided over the whole chain rather than handing to the head
+    assert nodes[2].spin != 0
+    assert lock.stats.inflations == 1 and lock.stats.shuffles == 1
+    # the skipped remote prefix moved to the secondary queue of the grantee
+    assert nodes[2].spin is nodes[0]
+
+
+def test_fissile_lock_threaded_stress_mutual_exclusion():
+    for threads, sockets in [(8, 2), (6, 3)]:
+        shared = run_lock_stress(
+            lambda sock: CNALock(numa_node_of=sock, threshold=0xF, fissile=True),
+            n_threads=threads, n_sockets=sockets, iters=40,
+        )
+        assert shared.counter == threads * 40
+
+
+def test_fissile_lock_fast_path_races_takeover():
+    """Two threads hammer an empty fissile lock: every acquisition is either
+    a fast acquire or a takeover/handover, and mutual exclusion holds (the
+    TS bit and the tail CAS are checked in one atomic step)."""
+    lock = CNALock(fissile=True)
+    counter = {"v": 0}
+    iters = 300
+
+    def body():
+        node = CNANode()
+        for _ in range(iters):
+            lock.acquire(node)
+            v = counter["v"]
+            counter["v"] = v + 1
+            lock.release(node)
+
+    ts = [threading.Thread(target=body) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert counter["v"] == 2 * iters
+    assert lock.tail is None and not lock._fast_held
+    assert lock.stats.fast_acquires >= 1
+    # every fast acquire's release either deflated (no one arrived) or
+    # inflated (adopted the queue head) — never both, never neither
+    assert lock.stats.fast_acquires == lock.stats.inflations + lock.stats.deflations
+
+
+# -- router-level regressions ---------------------------------------------------
+
+
+def _fleet(fissile: bool, *, kv_ship=True):
+    from repro.router.router import ReplicaRouter
+    from repro.router.sim import SimReplica
+
+    replicas = [SimReplica(r, 4, cache_budget=4_000) for r in range(2)]
+    # replica 1 holds the hot prefix; sessions are homed on replica 0, so a
+    # full-pipeline dispatch would price shipping 1 -> 0
+    replicas[1].cache.insert(tuple(range(64)))
+    router = ReplicaRouter(
+        replicas, seed=3, sync_every=0, kv_ship=kv_ship, fissile=fissile
+    )
+    router.sync()  # federation learns replica 1's holding
+    return router, replicas
+
+
+def test_router_fast_dispatch_books_zero_phantom_pricing():
+    """A headroom-home fissile dispatch skips ship pricing, fabric
+    accounting and federation discovery entirely — no phantom counters —
+    while the identically-configured plain arm prices the very same ship."""
+    from repro.router.router import Session
+
+    for fissile in (False, True):
+        router, replicas = _fleet(fissile)
+        routes_before = router.federation.stats.routes
+        s = Session(sid=0, prompt=tuple(range(64)), decode_len=2)
+        router.submit(s, home=0)  # pinned home: no route lookup either
+        out = router.dispatch_one()
+        assert out is not None and out[1] == 0
+        if fissile:
+            assert s.fast and s.ship is None
+            assert router.stats.fast_dispatches == 1
+            # zero fabric/ship/federation side effects
+            assert router.fabric.stats.priced == 0
+            assert router.stats.ships == 0
+            assert router.stats.ship_declined == 0
+            assert router.stats.ship_failed == 0
+            assert router.federation.stats.routes == routes_before
+        else:
+            # the control: the full pipeline did price this dispatch
+            assert not s.fast and s.ship is not None
+            assert router.stats.fast_dispatches == 0
+            assert router.fabric.stats.priced == 1
+        # real accounting is booked either way
+        assert router.stats.dispatched == 1
+        assert router.fleet.inflight[0] == 1
+        assert len(router.stats.stalls) == 1
+
+
+def test_router_fast_path_defers_to_pipeline_without_home_headroom():
+    """fast_ready alone is not enough: when the lone session's home is full,
+    the dispatch takes the full pipeline (and sheds) instead of admitting
+    past capacity."""
+    from repro.router.router import Session
+
+    router, replicas = _fleet(True, kv_ship=None)
+    # saturate replica 0 (the home)
+    for i in range(replicas[0].capacity):
+        filler = Session(sid=100 + i, prompt=(100 + i,), decode_len=2)
+        router.submit(filler, home=0)
+        router.dispatch_one()
+    assert not replicas[0].has_capacity()
+    s = Session(sid=0, prompt=(1, 2, 3), decode_len=2)
+    router.submit(s, home=0)
+    out = router.dispatch_one()
+    assert out is not None
+    assert not s.fast and s.replica == 1  # shed, not fast-dispatched
+    assert router.stats.sheds == 1
+
+
+def test_phase_conservation_survives_the_fissile_bypass():
+    """The exact attribution identity — queue_wait + dispatch + ship_wait +
+    prefill == admission_stall_total — holds on a fissile arm whose run
+    mixes fast-path and inflated dispatches (and prices the pipeline skip
+    via c_pipeline)."""
+    from benchmarks.common import zipf_draws
+    from repro.router.sim import FleetCostModel, shared_prefix_sessions, simulate
+
+    draws = zipf_draws(120, n_items=6, skew=1.0, rng=random.Random(5))
+    sessions = shared_prefix_sessions(draws, prefix_len=24, suffix_len=6, decode_len=6)
+    # bursty arrivals: long idle gaps (fast path) + pileups (inflation)
+    rng = random.Random(11)
+    t, arrivals = 0, []
+    for i in range(len(sessions)):
+        t += rng.choice([0, 0, 1, 2, 90])
+        arrivals.append(t)
+    res = simulate(
+        "federated", sessions, n_replicas=3, n_slots=2, cache_budget=500,
+        cm=FleetCostModel(c_pipeline=6), arrivals=arrivals, seed=7,
+        router_kwargs={"fissile": True},
+    )
+    assert 0 < res.fast_dispatches < res.n_sessions  # both modes exercised
+    assert sum(res.phase_cycles.values()) == res.admission_stall_total
+
+
+def test_fissile_sim_registered_in_lock_menagerie():
+    from repro.core.locks_sim import ALL_LOCKS, FissileCNASim
+
+    assert ALL_LOCKS["cna_fissile"] is FissileCNASim
